@@ -1,0 +1,46 @@
+"""Shared benchmark helpers: timing, state sizing, CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f'{name},{us_per_call:.1f},{derived}')
+
+
+def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall time (µs) of a jitted callable; blocks on outputs."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, 'size'))
+
+
+def classifier_accuracy(model, params, stream, steps: int = 5) -> float:
+    correct = total = 0
+    for i in range(steps):
+        b = stream.batch_at(10_000 + i)  # held-out region of the stream
+        logits, _ = model.apply(params, b['x'])
+        correct += int((jnp.argmax(logits, -1) == b['y']).sum())
+        total += b['y'].shape[0]
+    return correct / total

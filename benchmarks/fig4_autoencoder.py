@@ -1,0 +1,54 @@
+"""Paper Fig. 4: deep-autoencoder optimization with SGD / Adagrad / K-FAC /
+Shampoo / Eva (synthetic MNIST-like data offline; relative claim under test:
+Eva ≈ K-FAC ≪ SGD in loss-vs-iterations, Shampoo between)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.registry import make_optimizer
+from repro.core.transform import Extras
+from repro.data.synthetic import AEStream
+from repro.models import module as M
+from repro.models.simple import ae_loss_fn, autoencoder
+from repro.train.step import init_opt_state, make_train_step
+
+STEPS = 40
+BATCH = 128
+LRS = {'sgd': 0.3, 'adagrad': 0.05, 'kfac': 0.15, 'shampoo': 0.3, 'eva': 0.15,
+       'eva_f': 0.15, 'eva_s': 0.3}
+
+
+def train_one(name: str, steps: int = STEPS) -> tuple[float, float]:
+    model = autoencoder(hidden=(256, 64, 16, 64, 256), d_in=784)
+    model.loss_fn = ae_loss_fn(model)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    data = AEStream(batch=BATCH)
+    opt, capture = make_optimizer(name, lr=LRS.get(name, 0.1))
+    taps_fn = (lambda p: model.make_taps(BATCH, capture)) \
+        if capture.needs_taps else None
+    state = init_opt_state(model, opt, capture, params, data.batch_at(0),
+                           taps_fn=taps_fn)
+    step = jax.jit(make_train_step(model, opt, capture, taps_fn=taps_fn))
+    t0 = time.perf_counter()
+    loss = None
+    for i in range(steps):
+        params, state, metrics = step(params, state, data.batch_at(i))
+    loss = float(metrics['loss'])
+    wall = (time.perf_counter() - t0) / steps
+    return loss, wall * 1e6
+
+
+def run() -> None:
+    losses = {}
+    for name in ('sgd', 'adagrad', 'kfac', 'shampoo', 'eva'):
+        loss, us = train_one(name)
+        losses[name] = loss
+        emit(f'fig4/ae/{name}', us, f'loss_at_{STEPS}={loss:.4f}')
+    # headline relative claims
+    emit('fig4/ae/eva_vs_kfac', 0.0,
+         f'ratio={losses["eva"] / max(losses["kfac"], 1e-9):.3f}')
+    emit('fig4/ae/eva_vs_sgd', 0.0,
+         f'ratio={losses["eva"] / max(losses["sgd"], 1e-9):.3f}')

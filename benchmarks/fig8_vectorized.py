@@ -1,0 +1,22 @@
+"""Paper Fig. 8 + §5.6: vectorized algorithms track their originals.
+
+Eva-f vs FOOF and Eva-s vs Shampoo on the autoencoder task: final losses
+should be close (derived ratio ≈ 1), at a fraction of the step time."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from benchmarks.fig4_autoencoder import train_one
+
+
+def run() -> None:
+    pairs = [('eva_f', 'foof'), ('eva_s', 'shampoo')]
+    results = {}
+    for name in ('eva_f', 'foof', 'eva_s', 'shampoo'):
+        loss, us = train_one(name)
+        results[name] = (loss, us)
+        emit(f'fig8/ae/{name}', us, f'loss={loss:.4f}')
+    for vec, orig in pairs:
+        lv, tv = results[vec]
+        lo, to = results[orig]
+        emit(f'fig8/{vec}_vs_{orig}', 0.0,
+             f'loss_ratio={lv / max(lo, 1e-9):.3f};speedup={to / max(tv, 1e-9):.2f}x')

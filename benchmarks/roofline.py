@@ -1,0 +1,71 @@
+"""Roofline table (deliverable g): aggregate results/dryrun/*.json.
+
+Per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, memory/device — plus a one-line
+suggestion for moving the dominant term (heuristic from the breakdown).
+Writes results/roofline.md and prints CSV rows.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path('results/dryrun')
+
+
+def _suggest(rec: dict) -> str:
+    dom = rec['dominant']
+    coll = rec.get('collective_by_op', {})
+    if dom == 'collective_s':
+        worst = max(coll, key=coll.get) if coll else '?'
+        if worst == 'all-gather':
+            return 'reduce FSDP regather: larger model-axis shard or cached gather'
+        if worst == 'all-reduce':
+            return 'reduce-scatter grads / shrink TP psums (activation resharding)'
+        return f'restructure {worst} traffic'
+    if dom == 'memory_s':
+        return 'cut HBM traffic: fuse/remat less, smaller saved residuals'
+    return 'compute-bound: raise MFU via larger tiles / less recompute'
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob('*.json')):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run() -> None:
+    recs = load_records()
+    lines = ['| arch | shape | mesh | compute_s | memory_s | collective_s | '
+             'dominant | useful_flop_ratio | GiB/dev | note |',
+             '|---|---|---|---|---|---|---|---|---|---|']
+    for rec in recs:
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if 'skipped' in rec:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} |"
+                         f" — | — | — | skipped | — | — | {rec['skipped'][:60]} |")
+            emit(f'roofline/{tag}', 0.0, 'skipped')
+            continue
+        r = rec['roofline_s']
+        mem_gib = rec['memory']['total_bytes'] / 2 ** 30
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {rec['dominant'].replace('_s','')} "
+            f"| {rec['useful_flop_ratio']:.2f} | {mem_gib:.1f} "
+            f"| {_suggest(rec)} |")
+        dom_val = r[rec['dominant']]
+        emit(f'roofline/{tag}', dom_val * 1e6,
+             f"dominant={rec['dominant']};useful_ratio="
+             f"{rec['useful_flop_ratio']:.2f};mem_gib={mem_gib:.1f}")
+    out = Path('results/roofline.md')
+    out.parent.mkdir(exist_ok=True)
+    out.write_text('\n'.join(lines) + '\n')
+    print(f'# wrote {out} ({len(recs)} cells)')
+
+
+if __name__ == '__main__':
+    run()

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Roofline rows are included
+when results/dryrun has been populated by ``python -m repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    import benchmarks.fig4_autoencoder as fig4
+    import benchmarks.fig6_interval as fig6
+    import benchmarks.fig8_vectorized as fig8
+    import benchmarks.table1_complexity as table1
+    import benchmarks.table4_convergence as table4
+    import benchmarks.table5_itertime as table5
+    import benchmarks.table8_throughput as table8
+    import benchmarks.table10_evafs as table10
+    import benchmarks.roofline as roofline
+
+    modules = [table1, table5, fig4, table4, fig6, fig8, table8, table10,
+               roofline]
+    print('name,us_per_call,derived')
+    failures = []
+    for mod in modules:
+        t0 = time.time()
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod.__name__, repr(e)))
+            traceback.print_exc()
+        print(f'# {mod.__name__} done in {time.time() - t0:.1f}s',
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(f'benchmark failures: {failures}')
+
+
+if __name__ == '__main__':
+    main()

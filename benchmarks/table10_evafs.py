@@ -1,0 +1,30 @@
+"""Paper Table 10: Eva-f / Eva-s iteration time and memory vs SGD
+(transformer section; claim: ≈1.1–1.4× time, ≈1.0× state memory)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn, tree_bytes
+from repro.configs.registry import demo_lm
+from repro.core.registry import make_optimizer
+from repro.data.synthetic import LMStream
+from repro.models import build_model
+from repro.models import module as M
+from repro.train.step import init_opt_state, make_train_step
+
+
+def run() -> None:
+    cfg = demo_lm('small')
+    model = build_model(cfg)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    batch = LMStream(vocab=cfg.vocab, seq_len=64, batch=16, seed=0).batch_at(0)
+    res = {}
+    for name in ('sgd', 'eva_f', 'eva_s'):
+        opt, capture = make_optimizer(name, lr=0.01)
+        state = init_opt_state(model, opt, capture, params, batch)
+        step = jax.jit(make_train_step(model, opt, capture))
+        res[name] = (time_fn(step, params, state, batch), tree_bytes(state))
+    t0, m0 = res['sgd']
+    for name, (t, mem) in res.items():
+        emit(f'table10/{name}', t,
+             f'rel_time={t / t0:.2f};rel_state_mem={mem / max(m0, 1):.2f}')

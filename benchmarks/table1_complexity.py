@@ -1,0 +1,77 @@
+"""Paper Table 1: time & memory complexity of the second-order update.
+
+Measured on an L-layer MLP with hidden width d swept — optimizer *state*
+bytes (the second-order memory) and preconditioning wall time.  The paper's
+claims, in measurable form:
+  Eva    state ~ O(2dL)   (sublinear in params)   time ~ O(d²L)
+  K-FAC  state ~ O(2d²L)                          time ~ O(2d³L)
+  FOOF   state ~ O(d²L);  Shampoo ~ O(2d²L);  SGD-momentum ~ O(params).
+Derived column: state-bytes growth exponent w.r.t. d (≈1 for Eva, ≈2 for
+KFs) — the asymptotic separation Table 1 asserts.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn, tree_bytes
+from repro.core.registry import make_optimizer
+from repro.core.transform import Extras
+from repro.data.synthetic import ClassStream
+from repro.models import module as M
+from repro.models.simple import MLP, classifier_loss_fn
+from repro.train.step import compute_grads_and_stats, init_opt_state
+
+WIDTHS = (64, 128, 256)
+LAYERS = 4
+OPTS = ('sgd', 'adamw', 'eva', 'eva_f', 'eva_s', 'kfac', 'foof', 'shampoo', 'mfac')
+
+
+def _setup(d: int):
+    model = MLP([32, *([d] * LAYERS), 10])
+    model.loss_fn = classifier_loss_fn(model)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    stream = ClassStream(batch=64, dim=32, classes=10, seed=0)
+    return model, params, stream.batch_at(0)
+
+
+def run() -> None:
+    # SGD state (momentum, O(params)) is common to every optimizer here;
+    # Table 1 is about the SECOND-ORDER state, so report the excess over SGD.
+    sgd_bytes = {}
+    for d in WIDTHS:
+        model, params, batch = _setup(d)
+        opt, capture = make_optimizer('sgd', lr=0.01)
+        sgd_bytes[d] = tree_bytes(init_opt_state(model, opt, capture,
+                                                 params, batch))
+
+    for name in OPTS:
+        extra_bytes, times = [], []
+        for d in WIDTHS:
+            model, params, batch = _setup(d)
+            kw = {'m': 8} if name == 'mfac' else {}
+            opt, capture = make_optimizer(name, lr=0.01, **kw)
+            taps_fn = (lambda p, _m=model, _c=capture:
+                       _m.make_taps(64, _c)) if capture.needs_taps else None
+            st = init_opt_state(model, opt, capture, params, batch,
+                                taps_fn=taps_fn)
+            extra_bytes.append(max(tree_bytes(st) - sgd_bytes[d], 1))
+
+            @jax.jit
+            def step(p, s, b):
+                loss, grads, stats = compute_grads_and_stats(
+                    model, p, b, capture,
+                    taps_fn(p) if taps_fn else None)
+                u, s2 = opt.update(grads, s, params=p,
+                                   extras=Extras(stats=stats, loss=loss))
+                return u, s2
+
+            times.append(time_fn(step, params, st, batch))
+        # growth exponent of the second-order state in d:
+        # Eva KVs ~ d^1, K-FAC/FOOF/Shampoo KFs ~ d^2, first-order ~ 0
+        expo = (math.log(extra_bytes[-1] / extra_bytes[0])
+                / math.log(WIDTHS[-1] / WIDTHS[0]))
+        emit(f'table1/{name}/d{WIDTHS[-1]}', times[-1],
+             f'second_order_state_bytes={extra_bytes[-1]};growth_exp={expo:.2f}')

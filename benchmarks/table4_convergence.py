@@ -1,0 +1,61 @@
+"""Paper Table 4/7 analogue: accuracy / CE under a fixed iteration budget.
+
+Two tasks (synthetic stand-ins for Cifar per DESIGN.md §8):
+  * MLP classifier on gaussian blobs — accuracy after N steps for
+    SGD / Adagrad / AdamW / K-FAC / Eva,
+  * demo transformer LM on the bigram stream — CE after N steps for
+    SGD / AdamW / Eva / Eva-f / Eva-s (bigram entropy floor printed).
+Claim under test: Eva ≥ SGD at equal iterations, Eva ≈ K-FAC.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import classifier_accuracy, emit, time_fn
+from repro.configs.registry import demo_lm
+from repro.core.registry import make_optimizer
+from repro.data.synthetic import ClassStream, LMStream
+from repro.models import build_model
+from repro.models import module as M
+from repro.models.simple import MLP, classifier_loss_fn
+from repro.train.step import init_opt_state, make_train_step
+
+CLS_STEPS = 60
+LM_STEPS = 60
+LRS = {'sgd': 0.05, 'adagrad': 0.02, 'adamw': 1e-3, 'kfac': 0.05, 'eva': 0.05,
+       'eva_f': 0.05, 'eva_s': 0.05}
+
+
+def run() -> None:
+    # --- classifier ---
+    stream = ClassStream(batch=128, dim=64, classes=10, spread=1.2)
+    accs = {}
+    for name in ('sgd', 'adagrad', 'adamw', 'kfac', 'eva'):
+        model = MLP([64, 128, 128, 10])
+        model.loss_fn = classifier_loss_fn(model)
+        params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+        opt, capture = make_optimizer(name, lr=LRS[name])
+        taps_fn = (lambda p: model.make_taps(128, capture)) \
+            if capture.needs_taps else None
+        state = init_opt_state(model, opt, capture, params, stream.batch_at(0),
+                               taps_fn=taps_fn)
+        step = jax.jit(make_train_step(model, opt, capture, taps_fn=taps_fn))
+        for i in range(CLS_STEPS):
+            params, state, m = step(params, state, stream.batch_at(i))
+        accs[name] = classifier_accuracy(model, params, stream)
+        emit(f'table4/cls/{name}', 0.0, f'acc_at_{CLS_STEPS}={accs[name]:.4f}')
+
+    # --- LM ---
+    cfg = demo_lm('small')
+    data = LMStream(vocab=cfg.vocab, seq_len=64, batch=16, seed=0)
+    emit('table4/lm/bigram_floor', 0.0, f'ce_floor={data.bigram_ce:.4f}')
+    for name in ('sgd', 'adamw', 'eva', 'eva_f', 'eva_s'):
+        model = build_model(cfg)
+        params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+        opt, capture = make_optimizer(name, lr=LRS[name])
+        state = init_opt_state(model, opt, capture, params, data.batch_at(0))
+        step = jax.jit(make_train_step(model, opt, capture))
+        for i in range(LM_STEPS):
+            params, state, m = step(params, state, data.batch_at(i))
+        emit(f'table4/lm/{name}', 0.0,
+             f'ce_at_{LM_STEPS}={float(m["loss"]):.4f}')

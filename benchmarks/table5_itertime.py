@@ -1,0 +1,68 @@
+"""Paper Table 5: per-iteration time and memory relative to SGD.
+
+Two sections:
+  * transformer LM (demo config) — SGD / Eva / Eva-f / Eva-s / Shampoo@1 /
+    Shampoo@10 / AdamW (K-FAC's full-tap capture targets the MLP section;
+    see DESIGN.md §4.1),
+  * MLP — adds K-FAC@1 / K-FAC@10 / FOOF (explicit inverses).
+Derived: time and optimizer-state memory relative to SGD — the paper's
+headline "Eva ≈ 1.14× SGD time, ~1.0× memory; K-FAC/Shampoo ≫".
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn, tree_bytes
+from repro.configs.registry import demo_lm
+from repro.core.registry import make_optimizer
+from repro.data.synthetic import ClassStream, LMStream
+from repro.models import build_model
+from repro.models import module as M
+from repro.models.simple import MLP, classifier_loss_fn
+from repro.train.step import init_opt_state, make_train_step
+
+
+def _bench(model, params, batch, name, taps_batch=None, **opt_kw):
+    opt, capture = make_optimizer(name.split('@')[0], lr=0.01, **opt_kw)
+    taps_fn = None
+    if capture.needs_taps and hasattr(model, 'make_taps'):
+        taps_fn = lambda p: model.make_taps(taps_batch, capture)  # noqa: E731
+    state = init_opt_state(model, opt, capture, params, batch, taps_fn=taps_fn)
+    step = jax.jit(make_train_step(model, opt, capture, taps_fn=taps_fn))
+    t = time_fn(step, params, state, batch)
+    return t, tree_bytes(state)
+
+
+def run() -> None:
+    # --- transformer section ---
+    cfg = demo_lm('small')
+    model = build_model(cfg)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    data = LMStream(vocab=cfg.vocab, seq_len=64, batch=16, seed=0)
+    batch = data.batch_at(0)
+    results = {}
+    for name, kw in [('sgd', {}), ('eva', {}), ('eva_f', {}), ('eva_s', {}),
+                     ('adamw', {}), ('shampoo@1', {'interval': 1}),
+                     ('shampoo@10', {'interval': 10}), ('mfac', {'m': 8})]:
+        t, mem = _bench(model, params, batch, name, **kw)
+        results[name] = (t, mem)
+    t_sgd, m_sgd = results['sgd']
+    for name, (t, mem) in results.items():
+        emit(f'table5/lm/{name}', t,
+             f'rel_time={t / t_sgd:.2f};rel_state_mem={mem / max(m_sgd, 1):.2f}')
+
+    # --- MLP section (K-FAC / FOOF need full taps) ---
+    mlp = MLP([64, 256, 256, 256, 10])
+    mlp.loss_fn = classifier_loss_fn(mlp)
+    mparams = M.init_params(mlp.param_specs(), jax.random.PRNGKey(1))
+    mbatch = ClassStream(batch=128, dim=64, classes=10).batch_at(0)
+    mres = {}
+    for name, kw in [('sgd', {}), ('eva', {}), ('kfac@1', {'interval': 1}),
+                     ('kfac@10', {'interval': 10}), ('foof', {}),
+                     ('shampoo@1', {'interval': 1})]:
+        t, mem = _bench(mlp, mparams, mbatch, name, taps_batch=128, **kw)
+        mres[name] = (t, mem)
+    t_sgd, m_sgd = mres['sgd']
+    for name, (t, mem) in mres.items():
+        emit(f'table5/mlp/{name}', t,
+             f'rel_time={t / t_sgd:.2f};rel_state_mem={mem / max(m_sgd, 1):.2f}')

@@ -1,0 +1,31 @@
+"""Paper Table 8: training throughput (tokens/s) per optimizer on the demo
+transformer LM."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.configs.registry import demo_lm
+from repro.core.registry import make_optimizer
+from repro.data.synthetic import LMStream
+from repro.models import build_model
+from repro.models import module as M
+from repro.train.step import init_opt_state, make_train_step
+
+BATCH, SEQ = 16, 64
+
+
+def run() -> None:
+    cfg = demo_lm('small')
+    data = LMStream(vocab=cfg.vocab, seq_len=SEQ, batch=BATCH, seed=0)
+    batch = data.batch_at(0)
+    for name, kw in [('sgd', {}), ('eva', {}), ('shampoo@10', {'interval': 10}),
+                     ('adamw', {})]:
+        model = build_model(cfg)
+        params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+        opt, capture = make_optimizer(name.split('@')[0], lr=0.01, **kw)
+        state = init_opt_state(model, opt, capture, params, batch)
+        step = jax.jit(make_train_step(model, opt, capture))
+        us = time_fn(step, params, state, batch)
+        tput = BATCH * SEQ / (us / 1e6)
+        emit(f'table8/{name}', us, f'tokens_per_s={tput:.0f}')

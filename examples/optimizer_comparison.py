@@ -1,0 +1,49 @@
+"""Optimizer shoot-out (paper Tables 4/7 in miniature): every optimizer in
+the registry on the same LM task, equal iteration budget.
+
+    PYTHONPATH=src python examples/optimizer_comparison.py [--steps 80]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs.registry import demo_lm
+from repro.core import make_optimizer, optimizer_names
+from repro.data import LMStream
+from repro.models import build_model
+from repro.models import module as M
+from repro.train import init_opt_state, make_train_step
+
+LRS = {'sgd': 0.05, 'adagrad': 0.02, 'adamw': 1e-3, 'eva': 0.05,
+       'eva_f': 0.05, 'eva_s': 0.05, 'shampoo': 0.05, 'mfac': 0.05}
+SKIP = {'kfac', 'foof'}  # full-tap capture targets the MLP/AE models
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--steps', type=int, default=80)
+    args = ap.parse_args()
+    cfg = demo_lm('small')
+    data = LMStream(vocab=cfg.vocab, seq_len=64, batch=16, seed=0)
+    print(f'bigram CE floor: {data.bigram_ce:.4f}\n')
+    print(f'{"optimizer":10s} {"final CE":>9s} {"ms/step":>8s}')
+    for name in optimizer_names():
+        if name in SKIP:
+            continue
+        model = build_model(cfg)
+        params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+        kw = {'m': 8} if name == 'mfac' else {}
+        opt, capture = make_optimizer(name, lr=LRS.get(name, 0.05), **kw)
+        state = init_opt_state(model, opt, capture, params, data.batch_at(0))
+        step = jax.jit(make_train_step(model, opt, capture))
+        params, state, m = step(params, state, data.batch_at(0))  # compile
+        t0 = time.time()
+        for i in range(1, args.steps):
+            params, state, m = step(params, state, data.batch_at(i))
+        dt = (time.time() - t0) / (args.steps - 1) * 1e3
+        print(f'{name:10s} {float(m["loss"]):9.4f} {dt:8.1f}')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,59 @@
+"""Batched serving demo: prefill + greedy decode loop over the KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py [--tokens 32] [--batch 4]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import demo_lm
+from repro.data import LMStream
+from repro.models import build_model
+from repro.models import module as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--tokens', type=int, default=32)
+    ap.add_argument('--batch', type=int, default=4)
+    ap.add_argument('--prompt-len', type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = demo_lm('small')
+    model = build_model(cfg)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    prompts = LMStream(vocab=cfg.vocab, seq_len=args.prompt_len,
+                       batch=args.batch, seed=7).batch_at(0)['tokens']
+
+    # serving caches must outlive the prompt: preallocate to prompt+gen
+    total = args.prompt_len + args.tokens
+    prefill = jax.jit(model.prefill_fn)
+    decode = jax.jit(model.decode_fn, donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, {'tokens': prompts})
+    # grow the cache to the full serving length
+    grown = model.init_cache(args.batch, total)
+    cache = jax.tree_util.tree_map(
+        lambda full, part: jax.lax.dynamic_update_slice(
+            full, part.astype(full.dtype), (0,) * full.ndim), grown, cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    for i in range(args.tokens - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.asarray(args.prompt_len + i, jnp.int32))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f'generated {args.batch}×{args.tokens} tokens in {dt:.2f}s '
+          f'({args.batch * args.tokens / dt:.1f} tok/s)')
+    for b in range(args.batch):
+        print(f'  seq {b}: {list(map(int, gen[b][:16]))} ...')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import (SHAPE_BY_NAME, SHAPES, ArchConfig, ShapeCell,
+                                cell_skip_reason, cells_for)
+from repro.configs.registry import ARCH_IDS, demo_lm, get_config, get_reduced

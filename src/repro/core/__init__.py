@@ -1,0 +1,29 @@
+"""Eva core: vectorized second-order optimization (the paper's contribution).
+
+Public surface:
+  make_optimizer(name, **kw) -> (GradientTransformation, CaptureConfig)
+  eva / eva_f / eva_s / kfac / foof / shampoo / mfac / sgd / adagrad / adamw
+  kv: capture machinery;  precondition: Sherman-Morrison math
+"""
+from repro.core import kv, precondition, transform
+from repro.core.clipping import graft_to_grad_magnitude, kl_clip, kl_normalize
+from repro.core.eva import eva, eva_preconditioner
+from repro.core.eva_f import eva_f, eva_f_preconditioner
+from repro.core.eva_s import eva_s, eva_s_preconditioner
+from repro.core.firstorder import adagrad, adamw, sgd
+from repro.core.foof import foof, foof_preconditioner
+from repro.core.kfac import kfac, kfac_preconditioner
+from repro.core.mfac import mfac, mfac_preconditioner
+from repro.core.registry import capture_for, make_optimizer, optimizer_names
+from repro.core.shampoo import shampoo, shampoo_preconditioner
+from repro.core.transform import Extras, GradientTransformation, apply_updates, chain
+
+__all__ = [
+    'kv', 'precondition', 'transform', 'Extras', 'GradientTransformation',
+    'apply_updates', 'chain', 'make_optimizer', 'optimizer_names', 'capture_for',
+    'eva', 'eva_f', 'eva_s', 'kfac', 'foof', 'shampoo', 'mfac',
+    'sgd', 'adagrad', 'adamw', 'kl_clip', 'kl_normalize', 'graft_to_grad_magnitude',
+    'eva_preconditioner', 'eva_f_preconditioner', 'eva_s_preconditioner',
+    'kfac_preconditioner', 'foof_preconditioner', 'shampoo_preconditioner',
+    'mfac_preconditioner',
+]

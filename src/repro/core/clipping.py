@@ -1,0 +1,69 @@
+"""KL clipping (Eq. 16), KL normalization (§4.1) and grafting (§4.2).
+
+All three consume both the preconditioned updates (the incoming ``updates``)
+and the raw gradients (``extras.raw_grads``) threaded by ``chain``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transform import (Extras, GradientTransformation, _unit_init,
+                                  tree_vdot)
+
+Schedule = Union[float, Callable]
+
+
+def _lr_at(lr: Schedule, step) -> jnp.ndarray:
+    if callable(lr):
+        return jnp.asarray(lr(step), jnp.float32)
+    return jnp.asarray(lr, jnp.float32)
+
+
+def kl_clip(kappa: float = 1e-3, lr: Schedule = 0.1) -> GradientTransformation:
+    """ν = min(1, sqrt(κ / (α² Σ_l p_lᵀ g_l))); scales all updates by ν.
+
+    ``p`` are the (preconditioned) incoming updates, ``g`` the raw gradients.
+    (C+γI)^{-1} is PD so pᵀg ≥ 0; we clamp for numerical safety.
+    """
+
+    def update(updates, state, params=None, extras: Extras | None = None):
+        del params
+        alpha = _lr_at(lr, extras.step)
+        kl = jnp.maximum(tree_vdot(updates, extras.raw_grads), 0.0)
+        nu = jnp.minimum(1.0, jnp.sqrt(kappa / jnp.maximum(alpha * alpha * kl, 1e-20)))
+        return jax.tree_util.tree_map(lambda u: u * nu, updates), state
+
+    return GradientTransformation(_unit_init, update)
+
+
+def kl_normalize(eps: float = 1e-12) -> GradientTransformation:
+    """p / sqrt(Σ_l p_lᵀ g_l) — the hyper-parameter-free Eva-f stabilizer."""
+
+    def update(updates, state, params=None, extras: Extras | None = None):
+        del params
+        kl = jnp.maximum(tree_vdot(updates, extras.raw_grads), eps)
+        s = jax.lax.rsqrt(kl)
+        return jax.tree_util.tree_map(lambda u: u * s, updates), state
+
+    return GradientTransformation(_unit_init, update)
+
+
+def graft_to_grad_magnitude(eps: float = 1e-12) -> GradientTransformation:
+    """Per-layer scale sqrt(gᵀg / pᵀp): preconditioned *direction* with SGD
+    *magnitude* (the Eva-s stabilizer, after [Anil et al. 2021])."""
+
+    def update(updates, state, params=None, extras: Extras | None = None):
+        del params
+
+        def leaf(u, g):
+            u32 = u.astype(jnp.float32)
+            g32 = g.astype(jnp.float32)
+            s = jnp.sqrt(jnp.sum(g32 * g32) / jnp.maximum(jnp.sum(u32 * u32), eps))
+            return (u32 * s).astype(u.dtype)
+
+        return jax.tree_util.tree_map(leaf, updates, extras.raw_grads), state
+
+    return GradientTransformation(_unit_init, update)

@@ -1,0 +1,59 @@
+"""Eva-f (paper §4.1): vectorized FOOF — input-side-only rank-one
+preconditioning + hyper-parameter-free KL normalization."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv as kvlib
+from repro.core import precondition as pre
+from repro.core.clipping import kl_normalize
+from repro.core.eva import _extract, _zeros_like_spec
+from repro.core.transform import (Extras, GradientTransformation, chain,
+                                  add_decayed_weights, scale_by_schedule, trace)
+
+
+class EvaFState(NamedTuple):
+    running: kvlib.RunningStats
+
+
+def eva_f_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
+                         use_pallas: bool = False) -> GradientTransformation:
+    fields = ('a_mean',)
+
+    def init(params, extras: Extras | None = None):
+        del params
+        if extras is None or extras.stats is None:
+            raise ValueError('eva_f_preconditioner.init needs example stats')
+        return EvaFState(running=kvlib.init_running(
+            _zeros_like_spec(_extract(extras.stats, fields))))
+
+    def update(updates, state: EvaFState, params=None, extras: Extras | None = None):
+        del params
+        fresh = _extract(extras.stats, fields)
+        stats, running = kvlib.update_running(state.running, fresh, kv_decay)
+        flat = kvlib.flatten_params(updates)
+        for path, st in stats.items():
+            flat[path] = pre.eva_f_precondition(
+                flat[path], st.a_mean, gamma, use_pallas=use_pallas)
+        return kvlib.unflatten_params(flat), EvaFState(running=running)
+
+    return GradientTransformation(init, update)
+
+
+def eva_f(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
+          momentum: float = 0.9, weight_decay: float = 0.0,
+          use_pallas: bool = False) -> GradientTransformation:
+    parts = []
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    parts.append(eva_f_preconditioner(gamma, kv_decay, use_pallas=use_pallas))
+    parts.append(kl_normalize())
+    parts.append(trace(momentum))
+    parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
+    return chain(*parts)
+
+
+CAPTURE = kvlib.EVA_F_CAPTURE

@@ -1,0 +1,69 @@
+"""FOOF baseline (paper Eq. 6): right-side K-FAC, C = I ⊗ AAᵀ."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv as kvlib
+from repro.core import precondition as pre
+from repro.core.clipping import kl_normalize
+from repro.core.eva import _extract, _zeros_like_spec
+from repro.core.kfac import _damped_inv
+from repro.core.transform import (Extras, GradientTransformation, chain,
+                                  add_decayed_weights, scale_by_schedule, trace)
+
+
+class FoofState(NamedTuple):
+    running: kvlib.RunningStats
+    a_inv: dict
+    count: jnp.ndarray
+
+
+def foof_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
+                        interval: int = 1) -> GradientTransformation:
+    fields = ('a_outer',)
+
+    def init(params, extras: Extras | None = None):
+        del params
+        if extras is None or extras.stats is None:
+            raise ValueError('foof_preconditioner.init needs example stats')
+        run = kvlib.init_running(_zeros_like_spec(_extract(extras.stats, fields)))
+        a_inv = {p: jnp.zeros_like(st.a_outer) for p, st in run.stats.items()}
+        return FoofState(running=run, a_inv=a_inv, count=jnp.zeros((), jnp.int32))
+
+    def update(updates, state: FoofState, params=None, extras: Extras | None = None):
+        del params
+        fresh = _extract(extras.stats, fields)
+        stats, running = kvlib.update_running(state.running, fresh, kf_decay)
+
+        def recompute(_):
+            return {p: _damped_inv(st.a_outer, gamma) for p, st in stats.items()}
+
+        refresh = (state.count % interval) == 0
+        a_inv = jax.lax.cond(refresh, recompute, lambda _: state.a_inv, operand=None)
+
+        flat = kvlib.flatten_params(updates)
+        for p in stats:
+            g = flat[p].astype(jnp.float32)
+            flat[p] = jnp.einsum('...ij,...jo->...io', a_inv[p], g).astype(flat[p].dtype)
+        return kvlib.unflatten_params(flat), FoofState(
+            running=running, a_inv=a_inv, count=state.count + 1)
+
+    return GradientTransformation(init, update)
+
+
+def foof(lr=0.1, gamma: float = 0.03, kf_decay: float = 0.95, interval: int = 1,
+         momentum: float = 0.9, weight_decay: float = 0.0) -> GradientTransformation:
+    parts = []
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    parts.append(foof_preconditioner(gamma, kf_decay, interval))
+    parts.append(kl_normalize())
+    parts.append(trace(momentum))
+    parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
+    return chain(*parts)
+
+
+CAPTURE = kvlib.FOOF_CAPTURE

@@ -1,0 +1,96 @@
+"""K-FAC baseline (paper Eq. 5) with update-interval support.
+
+KF EMAs are refreshed every step (cheap relative to the inverses); the
+explicit damped inverses are recomputed every ``interval`` steps under a
+``lax.cond`` and cached in state — exactly the staleness trade-off the paper
+studies in Fig. 6.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv as kvlib
+from repro.core import precondition as pre
+from repro.core.clipping import kl_clip
+from repro.core.eva import _extract, _zeros_like_spec
+from repro.core.transform import (Extras, GradientTransformation, chain,
+                                  add_decayed_weights, scale_by_schedule, trace)
+
+
+class KfacState(NamedTuple):
+    running: kvlib.RunningStats
+    a_inv: dict
+    b_inv: dict
+    count: jnp.ndarray
+
+
+def _damped_inv(m: jnp.ndarray, gamma) -> jnp.ndarray:
+    d = m.shape[-1]
+    eye = jnp.eye(d, dtype=jnp.float32)
+    gam = jnp.asarray(gamma, jnp.float32)[..., None, None]
+    return jnp.linalg.inv(m.astype(jnp.float32) + gam * eye)
+
+
+def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
+                        interval: int = 1) -> GradientTransformation:
+    fields = ('a_outer', 'b_outer')
+
+    def init(params, extras: Extras | None = None):
+        del params
+        if extras is None or extras.stats is None:
+            raise ValueError('kfac_preconditioner.init needs example stats')
+        run = kvlib.init_running(_zeros_like_spec(_extract(extras.stats, fields)))
+        a_inv = {p: jnp.zeros_like(st.a_outer) for p, st in run.stats.items()}
+        b_inv = {p: jnp.zeros_like(st.b_outer) for p, st in run.stats.items()}
+        return KfacState(running=run, a_inv=a_inv, b_inv=b_inv,
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(updates, state: KfacState, params=None, extras: Extras | None = None):
+        del params
+        fresh = _extract(extras.stats, fields)
+        stats, running = kvlib.update_running(state.running, fresh, kf_decay)
+
+        def recompute(_):
+            a_inv, b_inv = {}, {}
+            for p, st in stats.items():
+                gamma_r, gamma_q = pre.kfac_pi_damping(st.a_outer, st.b_outer, gamma)
+                a_inv[p] = _damped_inv(st.a_outer, gamma_r)
+                b_inv[p] = _damped_inv(st.b_outer, gamma_q)
+            return a_inv, b_inv
+
+        def keep(_):
+            return state.a_inv, state.b_inv
+
+        refresh = (state.count % interval) == 0
+        a_inv, b_inv = jax.lax.cond(refresh, recompute, keep, operand=None)
+
+        flat = kvlib.flatten_params(updates)
+        for p in stats:
+            g = flat[p].astype(jnp.float32)
+            out = jnp.einsum('...ij,...jo->...io', a_inv[p], g)
+            out = jnp.einsum('...io,...oj->...ij', out, b_inv[p])
+            flat[p] = out.astype(flat[p].dtype)
+        return kvlib.unflatten_params(flat), KfacState(
+            running=running, a_inv=a_inv, b_inv=b_inv, count=state.count + 1)
+
+    return GradientTransformation(init, update)
+
+
+def kfac(lr=0.1, gamma: float = 0.03, kf_decay: float = 0.95,
+         interval: int = 1, kl_kappa: float = 1e-3, momentum: float = 0.9,
+         weight_decay: float = 0.0) -> GradientTransformation:
+    parts = []
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    parts.append(kfac_preconditioner(gamma, kf_decay, interval))
+    if kl_kappa is not None:
+        parts.append(kl_clip(kl_kappa, lr))
+    parts.append(trace(momentum))
+    parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
+    return chain(*parts)
+
+
+CAPTURE = kvlib.KFAC_CAPTURE

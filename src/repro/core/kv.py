@@ -1,0 +1,254 @@
+"""Kronecker-vector / Kronecker-factor capture — the JAX answer to hooks.
+
+The paper's PyTorch implementation captures layer inputs ``A`` and
+pre-activation output gradients ``B`` with forward-pre-hooks and
+backward-hooks.  JAX is functional, so we use two mechanisms instead:
+
+* **forward stats**: every preconditioned linear emits the statistics of its
+  *input* (``a_mean`` and/or ``a_outer``) as auxiliary outputs threaded
+  through the model's apply function (and stacked by ``lax.scan`` for
+  layer-stacked models).
+
+* **taps** for the backward side: the layer computes ``z = x @ W + t`` where
+  ``t`` is a zero *tap*.  For a vector tap of shape ``(d_out,)`` broadcast
+  over tokens, ``∂loss/∂t = Σ_tokens ∂loss/∂z`` — exactly the batch-summed
+  pre-activation gradient, i.e. the paper's ``b̄`` (with mean-loss convention,
+  ``b̄ = Σ_t cotangent_t``).  The backward of a broadcast-add is a reduce-sum
+  that XLA fuses into the existing backprop, so this costs **no extra
+  activation memory** — which is the whole point of Eva vs K-FAC.  For the
+  K-FAC baseline a *full* tap (``z``-shaped) materializes the cotangent so
+  ``BBᵀ`` can be formed; that expense is intrinsic to K-FAC, not the capture
+  mechanism.
+
+Scaling conventions (all with ``loss = mean over tokens`` and ``n`` tokens):
+  ``ā      = (1/n) Σ a_t``                    (paper's mean-col(A))
+  ``b̄      = (1/n) Σ ∂ℓ_t/∂z_t = Σ_t z̃_t``    (z̃ = cotangent of the mean loss)
+  ``A_kf   = (1/n) Σ a_t a_tᵀ``               (normalized K-FAC factor)
+  ``B_kf   = n · Σ z̃_t z̃_tᵀ``                 (= (1/n) Σ (∂ℓ_t/∂z_t)(·)ᵀ)
+Normalized KFs deviate from the paper's unnormalized Eq. 4 by a factor of n
+absorbed into the damping γ; Eq. 19's trust-region ordering
+``A_kf ⪰ ā āᵀ`` holds exactly in this convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Capture configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class CaptureConfig:
+    """What statistics the optimizer wants per preconditioned layer.
+
+    a: None | 'mean' | 'outer'   — input-activation side (forward).
+    b: None | 'mean' | 'outer'   — pre-activation-gradient side (backward).
+        'mean'  -> vector taps (d_out,)        [Eva]
+        'outer' -> full taps (tokens, d_out)   [K-FAC baseline only]
+    """
+
+    a: Optional[str] = None
+    b: Optional[str] = None
+
+    @property
+    def needs_taps(self) -> bool:
+        return self.b is not None
+
+    @property
+    def active(self) -> bool:
+        return self.a is not None or self.b is not None
+
+
+NO_CAPTURE = CaptureConfig(None, None)
+EVA_CAPTURE = CaptureConfig('mean', 'mean')
+EVA_F_CAPTURE = CaptureConfig('mean', None)
+FOOF_CAPTURE = CaptureConfig('outer', None)
+KFAC_CAPTURE = CaptureConfig('outer', 'outer')
+
+
+class LayerStats(NamedTuple):
+    """Per-layer captured statistics (leading dims = layer-stack / experts).
+
+    Any field may be None.  ``count`` is the number of tokens that
+    contributed (scalar, or per-expert ``(E,)`` for MoE layers).
+    """
+
+    a_mean: Any = None   # (..., d_in)
+    b_mean: Any = None   # (..., d_out)
+    a_outer: Any = None  # (..., d_in, d_in)
+    b_outer: Any = None  # (..., d_out, d_out)
+    count: Any = None
+
+
+# ---------------------------------------------------------------------------
+# Forward-side statistics helpers (used inside model code)
+
+
+def _flatten_tokens(x: jnp.ndarray) -> jnp.ndarray:
+    """(batch..., d) -> (tokens, d)."""
+    return x.reshape(-1, x.shape[-1])
+
+
+def fwd_stats(x: jnp.ndarray, capture: CaptureConfig) -> LayerStats:
+    """Input-side statistics of a linear layer's input ``x (..., d_in)``.
+
+    Reductions use ``preferred_element_type=f32`` instead of materializing
+    an f32 copy of the activation (at MoE scale that copy was one of the
+    largest HBM-traffic terms in the profile — §Perf)."""
+    if capture is None or capture.a is None:
+        return LayerStats()
+    xt = _flatten_tokens(x)
+    n = xt.shape[0]
+    ones = jnp.ones((n,), xt.dtype)
+    a_mean = jnp.einsum('ni,n->i', xt, ones,
+                        preferred_element_type=jnp.float32) / n
+    if capture.a == 'outer':
+        a_outer = jnp.einsum('ni,nj->ij', xt, xt,
+                             preferred_element_type=jnp.float32) / n
+        return LayerStats(a_mean=a_mean, a_outer=a_outer,
+                          count=jnp.asarray(n, jnp.float32))
+    return LayerStats(a_mean=a_mean, count=jnp.asarray(n, jnp.float32))
+
+
+def fwd_stats_masked(x: jnp.ndarray, mask: jnp.ndarray,
+                     capture: CaptureConfig) -> LayerStats:
+    """Masked input stats for MoE expert layers (fused reductions, no f32
+    activation copy).
+
+    x: (E, C, d_in) dispatched tokens; mask: (E, C) validity in {0,1}.
+    Returns per-expert stats with leading dim E.
+    """
+    if capture is None or capture.a is None:
+        return LayerStats()
+    cnt = jnp.sum(mask, axis=-1)                       # (E,)
+    denom = jnp.maximum(cnt, 1.0)[..., None]
+    a_mean = jnp.einsum('eci,ec->ei', x, mask.astype(x.dtype),
+                        preferred_element_type=jnp.float32) / denom
+    if capture.a == 'outer':
+        xm = x * mask[..., None].astype(x.dtype)
+        a_outer = jnp.einsum('eci,ecj->eij', xm, xm,
+                             preferred_element_type=jnp.float32) / denom[..., None]
+        return LayerStats(a_mean=a_mean, a_outer=a_outer, count=cnt)
+    return LayerStats(a_mean=a_mean, count=cnt)
+
+
+# ---------------------------------------------------------------------------
+# Taps
+
+
+def vector_tap_shape(w_shape: tuple[int, ...]) -> tuple[int, ...]:
+    """Weights are laid out (..., d_in, d_out); the tap is (..., d_out)."""
+    return tuple(w_shape[:-2]) + (w_shape[-1],)
+
+
+def make_vector_taps(params: Any, precon_paths: set[str]) -> dict[str, jnp.ndarray]:
+    """Zero vector taps for every preconditioned weight path.
+
+    ``params`` is a nested dict; ``precon_paths`` are '/'-joined key paths of
+    weight leaves (shape (..., d_in, d_out)).
+    """
+    flat = flatten_params(params)
+    taps = {}
+    for path in precon_paths:
+        w = flat[path]
+        taps[path] = jnp.zeros(vector_tap_shape(w.shape), jnp.float32)
+    return taps
+
+
+def flatten_params(params: Any, prefix: str = '') -> dict[str, Any]:
+    """Nested-dict params -> {'a/b/c': leaf}."""
+    out = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            key = f'{prefix}/{k}' if prefix else str(k)
+            out.update(flatten_params(v, key))
+    else:
+        out[prefix] = params
+    return out
+
+
+def unflatten_params(flat: dict[str, Any]) -> Any:
+    out: dict[str, Any] = {}
+    for path, leaf in flat.items():
+        keys = path.split('/')
+        d = out
+        for k in keys[:-1]:
+            d = d.setdefault(k, {})
+        d[keys[-1]] = leaf
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Finalization: merge forward stats and tap gradients
+
+
+def finalize_stats(forward: dict[str, LayerStats],
+                   tap_grads: Optional[dict[str, jnp.ndarray]],
+                   capture: CaptureConfig,
+                   n_tokens: Optional[jnp.ndarray] = None) -> dict[str, LayerStats]:
+    """Combine forward-side stats with tap gradients into optimizer stats.
+
+    For vector taps the gradient *is* ``b̄`` (see module docstring).  For MoE
+    layers (per-expert counts), ``b̄_e`` is rescaled to a per-routed-token
+    mean-consistent value: ``b̄_e = tap_grad_e * n / count_e``.
+    """
+    out = {}
+    for path, st in forward.items():
+        b_mean = None
+        b_outer = None
+        if tap_grads is not None and path in tap_grads:
+            tg = tap_grads[path]
+            if capture.b == 'mean':
+                b_mean = tg.astype(jnp.float32)
+                if st.count is not None and st.count.ndim >= 1 and n_tokens is not None:
+                    # per-expert rescale: tap sums cotangents of routed tokens
+                    scale = n_tokens / jnp.maximum(st.count, 1.0)
+                    b_mean = b_mean * scale[..., None]
+            elif capture.b == 'outer':
+                # tg is the full cotangent (tokens, d_out) (or stacked);
+                # B_kf = n * Σ z̃ z̃ᵀ.
+                zt = tg.reshape(-1, tg.shape[-1]).astype(jnp.float32)
+                n = n_tokens if n_tokens is not None else zt.shape[0]
+                b_outer = n * (zt.T @ zt)
+                b_mean = jnp.sum(zt, axis=0)
+        out[path] = LayerStats(a_mean=st.a_mean, b_mean=b_mean,
+                               a_outer=st.a_outer, b_outer=b_outer,
+                               count=st.count)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Running averages of stats (paper Eq. 14-15, bias-corrected)
+
+
+class RunningStats(NamedTuple):
+    stats: dict[str, LayerStats]
+    count: jnp.ndarray  # step counter for bias correction
+
+
+def init_running(stats_shapes: dict[str, LayerStats]) -> RunningStats:
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), stats_shapes)
+    return RunningStats(stats=zeros, count=jnp.zeros((), jnp.int32))
+
+
+def update_running(run: RunningStats, new: dict[str, LayerStats],
+                   decay: float) -> tuple[dict[str, LayerStats], RunningStats]:
+    """EMA with weight ``decay`` on the old value (paper's ξ = 1-decay).
+
+    Returns (bias-corrected stats to use this step, new running state).
+    Bias correction makes step 1 equal to the fresh batch stats — matching
+    the reference implementation's "initialize from first batch" behavior.
+    """
+    count = run.count + 1
+    ema = jax.tree_util.tree_map(
+        lambda o, s: decay * o + (1.0 - decay) * s.astype(jnp.float32),
+        run.stats, new)
+    corr = 1.0 - jnp.asarray(decay, jnp.float32) ** count.astype(jnp.float32)
+    corrected = jax.tree_util.tree_map(lambda x: x / corr, ema)
+    return corrected, RunningStats(stats=ema, count=count)

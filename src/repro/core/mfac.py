@@ -1,0 +1,83 @@
+"""M-FAC baseline [Frantar et al. 2021]: matrix-free FIM from a sliding
+window of m gradient copies.
+
+We implement the mathematically-equivalent Woodbury form
+``F^{-1}v = (1/λ)[v − Bᵀ((mλ)I + BBᵀ)^{-1} B v]`` with ``B (m, P)`` the
+gradient history — O(mP) memory, exactly the cost the paper's Table 1/§5.3
+charges M-FAC with (we default m=32; the suggested m=1024 is the
+out-of-memory case the paper cites).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv as kvlib
+from repro.core.transform import (Extras, GradientTransformation, chain,
+                                  scale_by_schedule, trace)
+
+
+class MfacState(NamedTuple):
+    buffer: jnp.ndarray   # (m, P) gradient history
+    filled: jnp.ndarray   # number of valid rows
+    head: jnp.ndarray     # ring-buffer write index
+
+
+def _flatten_all(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def _unflatten_all(vec: jnp.ndarray, like) -> dict:
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for l in leaves:
+        n = l.size
+        out.append(vec[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def mfac_preconditioner(m: int = 32, lam: float = 1e-3) -> GradientTransformation:
+
+    def init(params, extras: Extras | None = None):
+        del extras
+        p_total = sum(l.size for l in jax.tree_util.tree_leaves(params))
+        return MfacState(buffer=jnp.zeros((m, p_total), jnp.float32),
+                         filled=jnp.zeros((), jnp.int32),
+                         head=jnp.zeros((), jnp.int32))
+
+    def update(updates, state: MfacState, params=None, extras: Extras | None = None):
+        del params, extras
+        g = _flatten_all(updates)
+        buf = jax.lax.dynamic_update_slice(state.buffer, g[None, :], (state.head, 0))
+        filled = jnp.minimum(state.filled + 1, m)
+        head = (state.head + 1) % m
+        # mask out unfilled rows
+        row_ids = jnp.arange(m)
+        valid = (row_ids < filled).astype(jnp.float32)
+        b = buf * valid[:, None]
+        # F = λI + (1/m')ΣggT ; Woodbury with m' = filled
+        mp = jnp.maximum(filled.astype(jnp.float32), 1.0)
+        gram = (b @ b.T) / mp                       # (m, m)
+        core = gram + lam * jnp.eye(m) + (1 - valid)[:, None] * jnp.eye(m)
+        bv = b @ g / mp
+        x = jnp.linalg.solve(core, bv)
+        pvec = (g - b.T @ x) / lam
+        return _unflatten_all(pvec, updates), MfacState(buffer=buf, filled=filled, head=head)
+
+    return GradientTransformation(init, update)
+
+
+def mfac(lr=0.1, m: int = 32, lam: float = 1e-3,
+         momentum: float = 0.9) -> GradientTransformation:
+    return chain(
+        mfac_preconditioner(m, lam),
+        trace(momentum),
+        scale_by_schedule(lr if callable(lr) else (lambda _: lr)),
+    )
+
+
+CAPTURE = kvlib.NO_CAPTURE

@@ -1,0 +1,162 @@
+"""Sherman–Morrison rank-one preconditioning math (paper Eq. 13/21/23).
+
+All weights use the (..., d_in, d_out) layout (einsum '...i,...io->...o');
+leading dims are layer stacks / experts and every formula broadcasts over
+them, which is what lets a whole ``lax.scan``-stacked model be preconditioned
+in one fused XLA region instead of a per-layer Python loop.
+
+``use_pallas=True`` routes the two hot operations (bilinear form + rank-1
+update) through the Pallas TPU kernels in ``repro.kernels``; the default
+pure-jnp path is mathematically identical (the kernels are asserted against
+these functions in tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _f32(x):
+    # promote low-precision grads to f32 for the math; keep f64 under x64
+    return x.astype(jnp.promote_types(x.dtype, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Eva (Eq. 13): P = (G - (b̄ᵀGā)/(γ + ‖ā‖²‖b̄‖²) · ā b̄ᵀ) / γ
+# (paper layout ΔW ∝ b̄ āᵀ is for (d_out,d_in) weights; ours is transposed)
+
+
+def eva_precondition(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                     gamma: float, use_pallas: bool = False) -> jnp.ndarray:
+    """g: (..., d_in, d_out); a: (..., d_in); b: (..., d_out)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.eva_precondition(g, a, b, gamma)
+    g32, a32, b32 = _f32(g), _f32(a), _f32(b)
+    dot = jnp.einsum('...io,...i,...o->...', g32, a32, b32)
+    denom = gamma + jnp.sum(a32 * a32, -1) * jnp.sum(b32 * b32, -1)
+    coeff = dot / denom
+    p = (g32 - coeff[..., None, None] * (a32[..., :, None] * b32[..., None, :])) / gamma
+    return p.astype(g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Eva-f (Eq. 21): P = (G - ā (āᵀ G) / (γ + ‖ā‖²)) / γ
+
+
+def eva_f_precondition(g: jnp.ndarray, a: jnp.ndarray, gamma: float,
+                       use_pallas: bool = False) -> jnp.ndarray:
+    """g: (..., d_in, d_out); a: (..., d_in)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.eva_f_precondition(g, a, gamma)
+    g32, a32 = _f32(g), _f32(a)
+    u = jnp.einsum('...io,...i->...o', g32, a32)          # āᵀG  (..., d_out)
+    denom = gamma + jnp.sum(a32 * a32, -1)
+    p = (g32 - (a32[..., :, None] * u[..., None, :]) / denom[..., None, None]) / gamma
+    return p.astype(g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Eva-s (Eq. 23, k=2): KVs are the gradient's own row/col means
+
+
+def grad_kvs(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """v_in = mean over d_out of G; v_out = mean over d_in of G."""
+    g32 = _f32(g)
+    return jnp.mean(g32, axis=-1), jnp.mean(g32, axis=-2)
+
+
+def eva_s_precondition(g: jnp.ndarray, v_in: jnp.ndarray, v_out: jnp.ndarray,
+                       gamma: float, use_pallas: bool = False) -> jnp.ndarray:
+    """Same rank-one form as Eva with (v_in, v_out) in place of (ā, b̄)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.eva_precondition(g, v_in, v_out, gamma)
+    g32, vi, vo = _f32(g), _f32(v_in), _f32(v_out)
+    dot = jnp.einsum('...io,...i,...o->...', g32, vi, vo)
+    denom = gamma + jnp.sum(vi * vi, -1) * jnp.sum(vo * vo, -1)
+    coeff = dot / denom
+    p = (g32 - coeff[..., None, None] * (vi[..., :, None] * vo[..., None, :])) / gamma
+    return p.astype(g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Explicit-inverse baselines (K-FAC Eq. 5, FOOF Eq. 6, Shampoo Eq. 8)
+
+
+def _damped_solve(m: jnp.ndarray, rhs: jnp.ndarray, gamma) -> jnp.ndarray:
+    """(M + γI)^{-1} rhs for PSD M (..., d, d); batched over leading dims."""
+    d = m.shape[-1]
+    eye = jnp.eye(d, dtype=m.dtype)
+    gam = jnp.asarray(gamma, m.dtype)[..., None, None]   # scalar -> (1,1)
+    return jnp.linalg.solve(m + gam * eye, rhs)
+
+
+def kfac_pi_damping(a_outer: jnp.ndarray, b_outer: jnp.ndarray,
+                    gamma: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Martens-Grosse π-scaled split damping: γ_R = π√γ, γ_Q = √γ/π."""
+    d_in = a_outer.shape[-1]
+    d_out = b_outer.shape[-1]
+    tr_a = jnp.trace(a_outer, axis1=-2, axis2=-1) / d_in
+    tr_b = jnp.trace(b_outer, axis1=-2, axis2=-1) / d_out
+    pi = jnp.sqrt(jnp.maximum(tr_a, 1e-12) / jnp.maximum(tr_b, 1e-12))
+    root = jnp.sqrt(jnp.asarray(gamma, jnp.float32))
+    return pi * root, root / pi  # (γ_R for A-side, γ_Q for B-side)
+
+
+def kfac_precondition(g: jnp.ndarray, a_outer: jnp.ndarray, b_outer: jnp.ndarray,
+                      gamma: float) -> jnp.ndarray:
+    """(R+γ_R I)^{-1} G (Q+γ_Q I)^{-1} in our (d_in, d_out) layout."""
+    g32 = _f32(g)
+    gamma_r, gamma_q = kfac_pi_damping(a_outer, b_outer, gamma)
+    left = _damped_solve(_f32(a_outer), g32, gamma_r)
+    # right-side solve: X (Q+γI)^{-1}  ==  solve((Q+γI)ᵀ, Xᵀ)ᵀ ; Q symmetric.
+    right = _damped_solve(_f32(b_outer), jnp.swapaxes(left, -1, -2), gamma_q)
+    return jnp.swapaxes(right, -1, -2).astype(g.dtype)
+
+
+def foof_precondition(g: jnp.ndarray, a_outer: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """(R + γI)^{-1} G — FOOF preconditions the input side only."""
+    return _damped_solve(_f32(a_outer), _f32(g), gamma).astype(g.dtype)
+
+
+def _inv_proot_psd(m: jnp.ndarray, gamma: float, power: float) -> jnp.ndarray:
+    """(M + γI)^{-power} for PSD M via eigh; batched."""
+    w, v = jnp.linalg.eigh(_f32(m))
+    w = jnp.maximum(w, 0.0) + gamma
+    return jnp.einsum('...ij,...j,...kj->...ik', v, w ** (-power), v)
+
+
+def shampoo_precondition(g: jnp.ndarray, m_in: jnp.ndarray, m_out: jnp.ndarray,
+                         gamma: float) -> jnp.ndarray:
+    """G ×_in (M_in+γI)^{-1/4} ×_out (M_out+γI)^{-1/4} (k=2 modes)."""
+    g32 = _f32(g)
+    p_in = _inv_proot_psd(m_in, gamma, 0.25)
+    p_out = _inv_proot_psd(m_out, gamma, 0.25)
+    out = jnp.einsum('...ij,...jo->...io', p_in, g32)
+    out = jnp.einsum('...io,...oj->...ij', out, p_out)
+    return out.astype(g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference dense forms (tests only): build the full (C + γI)^{-1} g
+
+
+def eva_explicit(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                 gamma: float) -> jnp.ndarray:
+    """Literal (C+γI)^{-1} vec(G) with C = (b̄b̄ᵀ)⊗(āāᵀ) — O(d⁴), tests only.
+
+    vec() follows the paper: row-major flatten of the (d_out, d_in) weight;
+    with our (d_in, d_out) layout that is ``g.T.reshape(-1)`` and
+    ``C = kron(b̄b̄ᵀ, āāᵀ)``.
+    """
+    d_in, d_out = g.shape[-2], g.shape[-1]
+    vec = g.astype(jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    vec = jnp.swapaxes(vec, -1, -2).reshape(d_out * d_in)
+    c = jnp.kron(jnp.outer(b, b), jnp.outer(a, a))
+    p = jnp.linalg.solve(c + gamma * jnp.eye(d_out * d_in, dtype=c.dtype), vec)
+    return jnp.swapaxes(p.reshape(d_out, d_in), -1, -2).astype(g.dtype)

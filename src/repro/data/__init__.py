@@ -1,0 +1,6 @@
+from repro.data.memmap_loader import MemmapLM, write_tokens
+from repro.data.pipeline import Prefetcher
+from repro.data.synthetic import AEStream, ClassStream, LMStream
+
+__all__ = ['MemmapLM', 'write_tokens', 'Prefetcher', 'AEStream',
+           'ClassStream', 'LMStream']

@@ -1,0 +1,76 @@
+"""Memory-mapped token-file dataset (the production data path).
+
+Format: ``<path>.bin`` is a flat little-endian token array; ``<path>.json``
+holds {"dtype": "uint16"|"int32", "n_tokens": N}.  ``write_tokens`` creates
+both.  ``MemmapLM`` yields fixed-length (tokens, labels) windows:
+
+  * deterministic: window index = f(epoch_perm(seed), step, rank),
+  * disjoint across data-parallel ranks (rank r of W takes every W-th
+    window of a seeded per-epoch permutation),
+  * seekable: ``batch_at(step)`` — resume/elastic-restart safe.  When the
+    world size changes on restart, pass the *same* seed and the stream
+    stays a permutation of the corpus (windows shift ranks, never repeat
+    within an epoch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def write_tokens(path: str | Path, tokens: np.ndarray) -> None:
+    path = Path(path)
+    tokens = np.asarray(tokens)
+    assert tokens.ndim == 1
+    dtype = 'uint16' if tokens.max() < 2 ** 16 else 'int32'
+    tokens.astype(dtype).tofile(path.with_suffix('.bin'))
+    path.with_suffix('.json').write_text(json.dumps(
+        {'dtype': dtype, 'n_tokens': int(tokens.size)}))
+
+
+@dataclasses.dataclass
+class MemmapLM:
+    path: str
+    seq_len: int
+    batch: int                      # per-rank batch
+    rank: int = 0
+    world: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        meta = json.loads(Path(self.path).with_suffix('.json').read_text())
+        self._data = np.memmap(Path(self.path).with_suffix('.bin'),
+                               dtype=meta['dtype'], mode='r')
+        self.n_tokens = meta['n_tokens']
+        self.n_windows = (self.n_tokens - 1) // self.seq_len
+        if self.n_windows < self.batch * self.world:
+            raise ValueError('corpus too small for batch × world')
+        self._windows_per_epoch = self.n_windows - self.n_windows % (
+            self.batch * self.world)
+
+    def _epoch_perm(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, epoch))
+        return rng.permutation(self.n_windows)[:self._windows_per_epoch]
+
+    def batch_at(self, step: int) -> dict:
+        steps_per_epoch = self._windows_per_epoch // (self.batch * self.world)
+        epoch, within = divmod(step, steps_per_epoch)
+        perm = self._epoch_perm(epoch)
+        base = within * self.batch * self.world + self.rank
+        idx = perm[base: base + self.batch * self.world: self.world]
+        toks = np.stack([
+            self._data[i * self.seq_len: i * self.seq_len + self.seq_len + 1]
+            for i in idx]).astype(np.int32)
+        return {'tokens': jnp.asarray(toks[:, :-1]),
+                'labels': jnp.asarray(toks[:, 1:])}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

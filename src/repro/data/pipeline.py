@@ -1,0 +1,67 @@
+"""Background prefetch: overlap host-side data generation with device steps.
+
+``Prefetcher`` wraps any seekable stream (``batch_at(step)``) and keeps a
+bounded queue filled from a worker thread — on a real pod this is where
+per-host input pipelines (and their sharded ``jax.device_put``) live.
+It remains seekable: ``seek(step)`` drains and restarts the worker, so
+checkpoint-resume composes with prefetching.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Optional
+
+
+class Prefetcher:
+    def __init__(self, stream: Any, depth: int = 2, start_step: int = 0):
+        self.stream = stream
+        self.depth = depth
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._next_produce = start_step
+        self._next_consume = start_step
+        self._start()
+
+    def _start(self):
+        self._stop.clear()
+
+        def worker():
+            while not self._stop.is_set():
+                step = self._next_produce
+                batch = self.stream.batch_at(step)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((step, batch), timeout=0.1)
+                        self._next_produce = step + 1
+                        break
+                    except queue.Full:
+                        continue
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def batch_at(self, step: int):
+        """Seekable interface; sequential access is served from the queue."""
+        if step != self._next_consume:
+            self.seek(step)
+        s, batch = self._q.get()
+        assert s == step, (s, step)
+        self._next_consume = step + 1
+        return batch
+
+    def seek(self, step: int):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+        while not self._q.empty():
+            self._q.get_nowait()
+        self._next_produce = step
+        self._next_consume = step
+        self._start()
+
+    def close(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: bilinear form  d = aᵀ G b  (Eq. 13 numerator).
+
+Single pass over G: each (bm × bn) tile contracts against its a- and
+b-slices and accumulates into a (1,1) f32 VMEM scalar across the whole
+sequential grid.  Combined with ``rank1_update`` this gives the two-pass
+fused Eva step: 2 reads + 1 write of G total (vs ≥4 G-sized transfers for
+the unfused jnp composition).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bilinear_kernel(g_ref, a_ref, b_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[0, 0] += jnp.dot(a @ g, b)
+
+
+@functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
+def bilinear(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+             block_in: int = 512, block_out: int = 512,
+             interpret: bool = True) -> jnp.ndarray:
+    """aᵀ G b -> () f32.  g: (d_in, d_out); a: (d_in,); b: (d_out,)."""
+    d_in, d_out = g.shape
+    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    pad_in = (-d_in) % bm
+    pad_out = (-d_out) % bn
+    if pad_in or pad_out:
+        g = jnp.pad(g, ((0, pad_in), (0, pad_out)))
+        a = jnp.pad(a, (0, pad_in))
+        b = jnp.pad(b, (0, pad_out))
+    m, n = g.shape
+    out = pl.pallas_call(
+        _bilinear_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(g, a.astype(jnp.float32), b.astype(jnp.float32))
+    return out[0, 0]

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: tiled vector–matrix product  u = aᵀ G.
+
+Used by Eva-f (Eq. 21: u = āᵀG) and by the bilinear form (Eq. 13's
+b̄ᵀGā = u·b̄).  Memory-bound: each G tile is read once; partial products
+accumulate in the f32 VMEM output block across the reduction grid axis
+(TPU grid iterations are sequential, so the j-major accumulation is safe).
+
+Tiles are 128-aligned for the 8×128 VPU; the (bm × bn) G tile multiplies a
+(bm,) a-slice and accumulates into a (bn,) output slice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(g_ref, a_ref, o_ref):
+    i = pl.program_id(1)  # reduction index (d_in blocks)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    o_ref[...] += a @ g
+
+
+@functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
+def matvec(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
+           block_out: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """u = aᵀ G.  g: (d_in, d_out); a: (d_in,) -> (d_out,) f32."""
+    d_in, d_out = g.shape
+    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    pad_in = (-d_in) % bm
+    pad_out = (-d_out) % bn
+    if pad_in or pad_out:
+        g = jnp.pad(g, ((0, pad_in), (0, pad_out)))
+        a = jnp.pad(a, (0, pad_in))
+    m, n = g.shape
+    out = pl.pallas_call(
+        _matvec_kernel,
+        # out-block-major order: j outer, i inner -> accumulate over i
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(g, a.astype(jnp.float32))
+    return out[:d_out] if pad_out else out

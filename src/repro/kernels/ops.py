@@ -1,0 +1,57 @@
+"""Jit'd wrappers composing the Pallas kernels into the Eva ops.
+
+On TPU these run compiled (``interpret=False``); on this CPU container the
+same kernel bodies execute under ``interpret=True`` (Python semantics) —
+identical math, validated against ``ref.py`` in tests/test_kernels.py.
+
+Leading stack dims (layers/experts) are handled by vmapping the pallas_call
+— on TPU that folds the stack into the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bilinear import bilinear
+from repro.kernels.matvec import matvec
+from repro.kernels.rank1_update import rank1_update
+
+# flipped to False on real TPU backends
+INTERPRET = jax.default_backend() != 'tpu'
+
+
+def _vmap_to_2d(fn, *args):
+    """Apply fn over leading stack dims (all args share them)."""
+    g = args[0]
+    if g.ndim == 2:
+        return fn(*args)
+    return jax.vmap(lambda *a: _vmap_to_2d(fn, *a))(*args)
+
+
+def eva_precondition(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                     gamma: float) -> jnp.ndarray:
+    """Fused Eq. 13 via bilinear + rank1_update kernels."""
+
+    def one(g2, a1, b1):
+        dot = bilinear(g2, a1, b1, interpret=INTERPRET)
+        a32, b32 = a1.astype(jnp.float32), b1.astype(jnp.float32)
+        denom = gamma + jnp.sum(a32 * a32) * jnp.sum(b32 * b32)
+        return rank1_update(g2, a1, b1, dot / denom, 1.0 / gamma,
+                            interpret=INTERPRET)
+
+    return _vmap_to_2d(one, g, a, b)
+
+
+def eva_f_precondition(g: jnp.ndarray, a: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Fused Eq. 21 via matvec + rank1_update kernels."""
+
+    def one(g2, a1):
+        u = matvec(g2, a1, interpret=INTERPRET)
+        a32 = a1.astype(jnp.float32)
+        denom = gamma + jnp.sum(a32 * a32)
+        return rank1_update(g2, a1, u, 1.0 / denom, 1.0 / gamma,
+                            interpret=INTERPRET)
+
+    return _vmap_to_2d(one, g, a)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused rank-one update  P = s·(G − c·a bᵀ).
+
+This is the hot half of Eva's Sherman–Morrison step (Eq. 13): a purely
+memory-bound pass over the gradient (read G once, write P once, ~3 flops per
+element).  The roofline goal is streaming G at HBM bandwidth, so:
+
+  * G is tiled (block_in × block_out) — 128-aligned blocks so the VPU lanes
+    (8×128) are full and each tile sits in VMEM (default 512×512 f32 = 1 MiB
+    per operand buffer, well under the ~16 MiB/core VMEM budget with double
+    buffering);
+  * the KV slices a[i-block], b[j-block] are tiny VMEM residents;
+  * coeff/scale ride in as a (2,)-vector block broadcast to every tile
+    (computed on the host side of the op — see ops.eva_precondition).
+
+Grid iteration order is (d_in/bm, d_out/bn), sequential per TPU core;
+the fused multiply-sub runs on the VPU while the next G tile streams in.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rank1_kernel(g_ref, a_ref, b_ref, cs_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    coeff = cs_ref[0]
+    scale = cs_ref[1]
+    o_ref[...] = (scale * (g - coeff * (a[:, None] * b[None, :]))).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
+def rank1_update(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                 coeff: jnp.ndarray, scale: jnp.ndarray,
+                 block_in: int = 512, block_out: int = 512,
+                 interpret: bool = True) -> jnp.ndarray:
+    """P = scale·(G − coeff·a bᵀ).  g: (d_in, d_out); a: (d_in,); b: (d_out,).
+
+    Shapes not divisible by the block are padded (the pad region computes
+    garbage that is sliced off — cheaper than ragged BlockSpecs).
+    """
+    d_in, d_out = g.shape
+    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    pad_in = (-d_in) % bm
+    pad_out = (-d_out) % bn
+    if pad_in or pad_out:
+        g = jnp.pad(g, ((0, pad_in), (0, pad_out)))
+        a = jnp.pad(a, (0, pad_in))
+        b = jnp.pad(b, (0, pad_out))
+    m, n = g.shape
+    cs = jnp.stack([jnp.asarray(coeff, jnp.float32),
+                    jnp.asarray(scale, jnp.float32)])
+    out = pl.pallas_call(
+        _rank1_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), g.dtype),
+        interpret=interpret,
+    )(g, a.astype(jnp.float32), b.astype(jnp.float32), cs)
+    if pad_in or pad_out:
+        out = out[:d_in, :d_out]
+    return out

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (assert_allclose targets).
+
+Layouts match ``repro.core.precondition``: g (d_in, d_out), a (d_in,),
+b (d_out,).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matvec_ref(g: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """u = aᵀ G — contraction over d_in.  (d_in, d_out),(d_in,) -> (d_out,)"""
+    return jnp.einsum('io,i->o', g.astype(jnp.float32), a.astype(jnp.float32))
+
+
+def bilinear_ref(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """aᵀ G b (scalar)."""
+    return jnp.einsum('io,i,o->', g.astype(jnp.float32),
+                      a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def rank1_update_ref(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                     coeff, scale) -> jnp.ndarray:
+    """P = scale · (G − coeff · a bᵀ)."""
+    g32 = g.astype(jnp.float32)
+    out = scale * (g32 - coeff * (a.astype(jnp.float32)[:, None] *
+                                  b.astype(jnp.float32)[None, :]))
+    return out.astype(g.dtype)
+
+
+def eva_precondition_ref(g, a, b, gamma: float) -> jnp.ndarray:
+    """Full fused Eva preconditioning (Eq. 13), the composition target."""
+    dot = bilinear_ref(g, a, b)
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    denom = gamma + jnp.sum(a32 * a32) * jnp.sum(b32 * b32)
+    return rank1_update_ref(g, a, b, dot / denom, 1.0 / gamma)
+
+
+def eva_f_precondition_ref(g, a, gamma: float) -> jnp.ndarray:
+    """Eva-f (Eq. 21): P = (G − a (aᵀG) / (γ+‖a‖²)) / γ."""
+    u = matvec_ref(g, a)
+    a32 = a.astype(jnp.float32)
+    denom = gamma + jnp.sum(a32 * a32)
+    g32 = g.astype(jnp.float32)
+    return ((g32 - (a32[:, None] * u[None, :]) / denom) / gamma).astype(g.dtype)

@@ -1,0 +1,69 @@
+"""Production training launcher.
+
+Single-host execution of the full stack (config → model → Eva → trainer with
+checkpointing/preemption).  On a real multi-pod deployment the same entry
+point runs under ``jax.distributed.initialize()`` (one process per host —
+see ``launch/run_multipod.sh``); the step function, shardings and
+checkpoint protocol are host-count-agnostic.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \\
+        --steps 50 --opt eva
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_reduced
+from repro.configs.registry import ARCH_IDS, demo_lm
+from repro.core import make_optimizer
+from repro.data import LMStream, Prefetcher
+from repro.models import build_model
+from repro.models import module as M
+from repro.train import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default='demo', help=f'demo|{"|".join(ARCH_IDS)}')
+    ap.add_argument('--reduced', action='store_true',
+                    help='use the reduced config (CPU-runnable)')
+    ap.add_argument('--opt', default='eva')
+    ap.add_argument('--lr', type=float, default=0.05)
+    ap.add_argument('--steps', type=int, default=100)
+    ap.add_argument('--batch', type=int, default=8)
+    ap.add_argument('--seq-len', type=int, default=64)
+    ap.add_argument('--ckpt-every', type=int, default=25)
+    ap.add_argument('--out-dir', default='runs/launch')
+    ap.add_argument('--no-prefetch', action='store_true')
+    ap.add_argument('--distributed', action='store_true',
+                    help='call jax.distributed.initialize() (multi-host pods)')
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    if args.arch == 'demo':
+        cfg = demo_lm('small')
+    else:
+        cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if cfg.family in ('encdec', 'vlm') or cfg.input_is_embeds:
+        raise SystemExit(f'{cfg.name}: use the dry-run/examples for stub-'
+                         'frontend archs; the LM trainer needs token input')
+
+    model = build_model(cfg)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    print(f'{cfg.name}: {M.count_params(model.param_specs())/1e6:.2f}M params')
+    stream = LMStream(vocab=cfg.vocab, seq_len=args.seq_len, batch=args.batch,
+                      seed=0)
+    data = stream if args.no_prefetch else Prefetcher(stream)
+    opt, capture = make_optimizer(args.opt, lr=args.lr)
+    tc = TrainerConfig(total_steps=args.steps, log_every=10,
+                       ckpt_every=args.ckpt_every,
+                       out_dir=f'{args.out_dir}/{cfg.name}-{args.opt}')
+    Trainer(model, opt, capture, tc).fit(params, data)
+
+
+if __name__ == '__main__':
+    main()

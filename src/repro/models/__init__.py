@@ -1,0 +1,9 @@
+"""Model zoo: dense/MoE/VLM transformer, Mamba2 SSD, Jamba hybrid,
+whisper-style enc-dec, and the paper's autoencoder/MLP."""
+from repro.models.registry import (build_model, decode_specs,
+                                   prefill_batch_specs, train_batch_specs)
+from repro.models.simple import MLP, autoencoder, ae_loss_fn, classifier_loss_fn
+
+__all__ = ['build_model', 'decode_specs', 'prefill_batch_specs',
+           'train_batch_specs', 'MLP', 'autoencoder', 'ae_loss_fn',
+           'classifier_loss_fn']

@@ -1,0 +1,227 @@
+"""GQA attention: naive and chunked (flash-style, online-softmax) paths,
+plus KV-cache decode.  KV heads are never materialized ``G`` times — queries
+are grouped ``(B, S, KV, G, Dh)`` and contracted against un-repeated K/V.
+
+``impl='naive'`` materializes (B,KV,G,Sq,Sk) scores — simplest HLO, highest
+HBM traffic.  ``impl='chunked'`` scans over K/V chunks with an online softmax
+(the TPU-friendly flash adaptation: block sizes are chosen so the working set
+sits in VMEM and the MXU sees [q_chunk × Dh] × [Dh × k_chunk] matmuls); this
+is one of the §Perf hillclimb levers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, linear, linear_spec
+from repro.sharding.constraints import constrain
+
+NEG_INF = -1e30
+
+
+def _shard_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, H, Dh): batch -> data axes, heads -> model when divisible,
+    head_dim NEVER sharded (a sharded contraction dim would psum every
+    attention score tile — the §Perf collective-bound fix)."""
+    return constrain(x, 'data', None, 'model', None)
+
+
+def attention_spec(d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+                   dtype=jnp.float32, qkv_bias: bool = False) -> dict:
+    return {
+        'q': linear_spec(d_model, n_heads * head_dim, ('embed', 'heads'), dtype, qkv_bias),
+        'k': linear_spec(d_model, n_kv_heads * head_dim, ('embed', 'kv_heads'), dtype, qkv_bias),
+        'v': linear_spec(d_model, n_kv_heads * head_dim, ('embed', 'kv_heads'), dtype, qkv_bias),
+        'o': linear_spec(n_heads * head_dim, d_model, ('heads', 'embed'), dtype, False),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attends (q: (B,Sq,H,Dh), k/v: (B,Sk,KV,Dh))
+
+
+def _group(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, dh)
+
+
+def attend_naive(q, k, v, *, causal: bool,
+                 q_positions=None, k_positions=None) -> jnp.ndarray:
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    qg = _group(q, kvh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum('bqkgd,bskd->bkgqs', qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qp = q_positions if q_positions is not None else jnp.arange(sq)
+        kp = k_positions if k_positions is not None else jnp.arange(k.shape[1])
+        mask = qp[:, None] >= kp[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum('bkgqs,bskd->bqkgd', w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attend_chunked(q, k, v, *, causal: bool, q_chunk: int = 512,
+                   k_chunk: int = 1024) -> jnp.ndarray:
+    """Flash-style: map over query chunks, scan over key chunks with an
+    online softmax.  Causal masking is applied per (q_chunk × k_chunk) tile;
+    fully-masked tiles still compute (baseline; see §Perf for the
+    block-skipping iteration)."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    nq, nk = sq // q_chunk, sk // k_chunk
+    assert sq % q_chunk == 0 and sk % k_chunk == 0, (sq, q_chunk, sk, k_chunk)
+    scale = 1.0 / math.sqrt(dh)
+
+    qg = _group(q, kvh).reshape(b, nq, q_chunk, kvh, g, dh)
+    kc = k.reshape(b, nk, k_chunk, kvh, dh)
+    vc = v.reshape(b, nk, k_chunk, kvh, dh)
+
+    def one_q_chunk(qi, q_blk):
+        # q_blk: (b, q_chunk, kvh, g, dh)
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            ki, k_blk, v_blk = xs
+            s = jnp.einsum('bqkgd,bskd->bkgqs', q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            if causal:
+                qp = qi * q_chunk + jnp.arange(q_chunk)
+                kp = ki * k_chunk + jnp.arange(k_chunk)
+                mask = qp[:, None] >= kp[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                'bkgqs,bskd->bkgqd', p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, dh), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (b,kvh,g,qc,dh)
+        return jnp.moveaxis(out, 3, 1)                    # (b,qc,kvh,g,dh)
+
+    outs = jax.lax.map(lambda args: one_q_chunk(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dh)  # (b,nq,qc,...)->(b,sq,h,dh)
+    return out.astype(q.dtype)
+
+
+def attend_decode(q, cache_k, cache_v, pos) -> jnp.ndarray:
+    """Single-token decode: q (B,1,H,Dh) against the full cache, masked to
+    positions <= pos.  O(S) — this is the sub-quadratic decode path."""
+    b, _, h, dh = q.shape
+    kvh = cache_k.shape[2]
+    qg = _group(q, kvh)
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum('bqkgd,bskd->bkgqs', qg.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) * scale
+    valid = jnp.arange(cache_k.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum('bkgqs,bskd->bqkgd', w, cache_v.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def attend(q, k, v, *, causal: bool, impl: str = 'naive',
+           q_chunk: int = 512, k_chunk: int = 1024) -> jnp.ndarray:
+    if impl == 'flash':
+        from repro.models.flash import flash_attention
+        return flash_attention(q, k, v, causal, q_chunk, k_chunk)
+    if impl == 'chunked':
+        return attend_chunked(q, k, v, causal=causal,
+                              q_chunk=q_chunk, k_chunk=k_chunk)
+    return attend_naive(q, k, v, causal=causal)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (projections + rope + attend)
+
+
+def attention_block(p, x, *, n_heads: int, n_kv_heads: int, head_dim: int,
+                    positions, causal: bool = True, rope: bool = True,
+                    rope_theta: float = 10000.0, impl: str = 'naive',
+                    q_chunk: int = 512, k_chunk: int = 1024,
+                    kv_x: Optional[jnp.ndarray] = None, is_cross: bool = False,
+                    cache: Optional[dict] = None, cache_pos=None,
+                    cross_prefill: bool = False,
+                    path: str = '', col=None, taps=None, capture=None,
+                    compute_dtype=None):
+    """Returns (out, new_cache).  ``is_cross`` marks cross-attention (K/V
+    from ``kv_x`` at train/prefill, from ``cache`` at decode);
+    ``cross_prefill`` computes cross K/V from ``kv_x`` and writes the cache."""
+    b = x.shape[0]
+    kw = dict(col=col if col is not None else {}, taps=taps, capture=capture,
+              compute_dtype=compute_dtype)
+    q = linear(p['q'], x, path=f'{path}/q', **kw)
+    q = q.reshape(b, x.shape[1], n_heads, head_dim)
+    if rope:
+        q = apply_rope(q, positions, rope_theta)
+    q = _shard_heads(q)
+
+    if is_cross:
+        if cache is not None and not cross_prefill:
+            # decode: read-only cached encoder keys/values
+            out = attend_naive(q, cache['k'], cache['v'], causal=False)
+            new_cache = cache
+        else:
+            assert kv_x is not None, 'cross-attention needs kv_x at train/prefill'
+            k = linear(p['k'], kv_x, path=f'{path}/k', **kw)
+            v = linear(p['v'], kv_x, path=f'{path}/v', **kw)
+            k = _shard_heads(k.reshape(b, kv_x.shape[1], n_kv_heads, head_dim))
+            v = _shard_heads(v.reshape(b, kv_x.shape[1], n_kv_heads, head_dim))
+            if cache is not None:  # cross prefill: populate the cache
+                ck = jax.lax.dynamic_update_slice(
+                    cache['k'], k.astype(cache['k'].dtype), (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache['v'], v.astype(cache['v'].dtype), (0, 0, 0, 0))
+                new_cache = {'k': ck, 'v': cv}
+            else:
+                new_cache = None
+            out = attend_naive(q, k, v, causal=False)
+    else:
+        k = linear(p['k'], x, path=f'{path}/k', **kw)
+        v = linear(p['v'], x, path=f'{path}/v', **kw)
+        k = _shard_heads(k.reshape(b, x.shape[1], n_kv_heads, head_dim))
+        v = _shard_heads(v.reshape(b, x.shape[1], n_kv_heads, head_dim))
+        if rope:
+            if cache is not None and q.shape[1] == 1:  # decode: key at cache_pos
+                k = apply_rope(k, jnp.full((b, 1), cache_pos), rope_theta)
+            else:
+                k = apply_rope(k, positions, rope_theta)
+
+        if cache is not None:
+            start = cache_pos if q.shape[1] == 1 else 0
+            ck = jax.lax.dynamic_update_slice(
+                cache['k'], k.astype(cache['k'].dtype), (0, start, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache['v'], v.astype(cache['v'].dtype), (0, start, 0, 0))
+            new_cache = {'k': ck, 'v': cv}
+            if q.shape[1] == 1:
+                out = attend_decode(q, ck, cv, cache_pos)
+            else:
+                out = attend(q, k, v, causal=causal, impl=impl,
+                             q_chunk=q_chunk, k_chunk=k_chunk)
+        else:
+            new_cache = None
+            out = attend(q, k, v, causal=causal, impl=impl,
+                         q_chunk=q_chunk, k_chunk=k_chunk)
+
+    out = out.reshape(b, x.shape[1], n_heads * head_dim)
+    y = linear(p['o'], out, path=f'{path}/o', **kw)
+    return y, new_cache

@@ -1,0 +1,223 @@
+"""Whisper-style encoder-decoder backbone (``encdec`` family).
+
+The conv audio frontend is a STUB per assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d_model).  Sinusoidal positions,
+LayerNorm, GELU MLPs, bias on QKV — decoder adds causal self-attention +
+cross-attention; decode serves from self- and cross-caches.
+``dec_len = seq_len // dec_ratio`` (≈ Whisper's 1500:448 enc:dec ratio).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import kv as kvlib
+from repro.models import module as M
+from repro.models.attention import attention_block, attention_spec
+from repro.models.layers import (embed, embed_spec, gelu_mlp, gelu_mlp_spec,
+                                 linear, linear_spec, make_norm,
+                                 sinusoidal_positions)
+from repro.models.transformer import _remat_policy, cross_entropy
+from repro.sharding.constraints import shard_activations
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.n_enc = cfg.n_enc_layers or cfg.n_layers
+        self.n_dec = cfg.n_dec_layers or cfg.n_layers
+
+    # -- specs --------------------------------------------------------------
+
+    def _enc_block_spec(self) -> dict:
+        cfg = self.cfg
+        norm_spec, _ = make_norm(cfg.norm)
+        return {
+            'norm1': norm_spec(cfg.d_model, cfg.pdtype),
+            'attn': attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, cfg.pdtype, cfg.qkv_bias),
+            'norm2': norm_spec(cfg.d_model, cfg.pdtype),
+            'mlp': gelu_mlp_spec(cfg.d_model, cfg.d_ff, cfg.pdtype),
+        }
+
+    def _dec_block_spec(self) -> dict:
+        cfg = self.cfg
+        spec = dict(self._enc_block_spec())
+        norm_spec, _ = make_norm(cfg.norm)
+        spec['norm_x'] = norm_spec(cfg.d_model, cfg.pdtype)
+        spec['xattn'] = attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                       cfg.head_dim, cfg.pdtype, cfg.qkv_bias)
+        return spec
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        norm_spec, _ = make_norm(cfg.norm)
+        return {
+            'embed': embed_spec(cfg.vocab, cfg.d_model, cfg.pdtype),
+            'enc_blocks': M.stack_specs(self._enc_block_spec(), self.n_enc),
+            'enc_norm_f': norm_spec(cfg.d_model, cfg.pdtype),
+            'dec_blocks': M.stack_specs(self._dec_block_spec(), self.n_dec),
+            'dec_norm_f': norm_spec(cfg.d_model, cfg.pdtype),
+            'lm_head': linear_spec(cfg.d_model, cfg.vocab, ('embed', 'vocab'),
+                                   cfg.pdtype),
+        }
+
+    def precon_paths(self) -> set[str]:
+        paths = set()
+        for stack, subs in (('enc_blocks', ('attn',)), ('dec_blocks', ('attn', 'xattn'))):
+            for sub in subs:
+                paths |= {f'{stack}/{sub}/{s}/w' for s in ('q', 'k', 'v', 'o')}
+            paths |= {f'{stack}/mlp/fc1/w', f'{stack}/mlp/fc2/w'}
+        paths.add('lm_head/w')
+        return paths
+
+    # -- encoder ------------------------------------------------------------
+
+    def _encode(self, params, embeds, *, taps=None, capture=None):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        x = embeds.astype(cfg.cdtype)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        block_taps = M.subtree(taps, 'enc_blocks') or {}
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(h, xs):
+            h = shard_activations(h)
+            bp, bt = xs
+            bcol: dict = {}
+            kw = dict(col=bcol, taps=bt or None, capture=capture,
+                      compute_dtype=cfg.cdtype)
+            a, _ = attention_block(bp['attn'], norm(bp['norm1'], h),
+                                   n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                                   head_dim=cfg.head_dim, positions=positions,
+                                   causal=False, rope=False, path='attn', **kw)
+            h = h + a
+            h = h + gelu_mlp(bp['mlp'], norm(bp['norm2'], h), path='mlp', **kw)
+            return h, bcol
+
+        policy = _remat_policy(cfg.remat)
+        if policy is not None or cfg.remat == 'full':
+            body = jax.checkpoint(body, policy=policy)
+        x, cols = jax.lax.scan(body, x, (params['enc_blocks'], block_taps))
+        x = norm(params['enc_norm_f'], x)
+        return x, M.add_prefix(cols, 'enc_blocks')
+
+    # -- decoder ------------------------------------------------------------
+
+    def _decode_stack(self, params, x, enc_out, *, taps=None, capture=None,
+                      cache=None, cache_pos=None, prefill: bool = False):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        block_taps = M.subtree(taps, 'dec_blocks') or {}
+        has_cache = cache is not None
+        b, s = x.shape[:2]
+        if cache_pos is not None and s == 1:
+            positions = jnp.full((b, 1), cache_pos)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        if s == 1 and cache_pos is not None:
+            # decode: table sized to the cache's max sequence length
+            max_seq = cache['dec']['self']['k'].shape[2] if has_cache else 4096
+            pe = sinusoidal_positions(max_seq, cfg.d_model)
+            x = x + jax.lax.dynamic_slice_in_dim(pe, cache_pos, 1)[None].astype(x.dtype)
+        else:
+            x = x + sinusoidal_positions(s, cfg.d_model)[None].astype(x.dtype)
+
+        def body(h, xs):
+            h = shard_activations(h)
+            if has_cache:
+                bp, bt, bc = xs
+            else:
+                bp, bt = xs
+                bc = None
+            bcol: dict = {}
+            kw = dict(col=bcol, taps=bt or None, capture=capture,
+                      compute_dtype=cfg.cdtype)
+            a, self_c = attention_block(
+                bp['attn'], norm(bp['norm1'], h), n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                positions=positions, causal=True, rope=False,
+                cache=bc.get('self') if bc else None, cache_pos=cache_pos,
+                path='attn', **kw)
+            h = h + a
+            # cross-attention: train/prefill kv from enc_out (prefill writes
+            # the cross cache); decode reads the cached cross K/V.
+            xa, cross_c = attention_block(
+                bp['xattn'], norm(bp['norm_x'], h), n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                positions=positions, causal=False, rope=False,
+                kv_x=enc_out, is_cross=True,
+                cache=bc.get('cross') if bc else None,
+                cross_prefill=prefill, path='xattn', **kw)
+            h = h + xa
+            h = h + gelu_mlp(bp['mlp'], norm(bp['norm2'], h), path='mlp', **kw)
+            ys = (bcol, {'self': self_c, 'cross': cross_c}) if has_cache else (bcol,)
+            return h, ys
+
+        policy = _remat_policy(cfg.remat)
+        if policy is not None or cfg.remat == 'full':
+            body = jax.checkpoint(body, policy=policy)
+
+        if has_cache:
+            x, (cols, new_caches) = jax.lax.scan(
+                body, x, (params['dec_blocks'], block_taps, cache['dec']))
+            new_cache = {'dec': new_caches}
+        else:
+            x, (cols,) = jax.lax.scan(body, x, (params['dec_blocks'], block_taps))
+            new_cache = None
+        x = norm(params['dec_norm_f'], x)
+        return x, M.add_prefix(cols, 'dec_blocks'), new_cache
+
+    # -- entry points ---------------------------------------------------------
+
+    def loss_fn(self, params, taps, batch, capture: Optional[kvlib.CaptureConfig]):
+        cfg = self.cfg
+        enc_out, col_e = self._encode(params, batch['embeds'], taps=taps,
+                                      capture=capture)
+        x = embed(params['embed'], batch['tokens'], cfg.cdtype)
+        b, s = x.shape[:2]
+        x, col_d, _ = self._decode_stack(params, x, enc_out, taps=taps,
+                                         capture=capture)
+        col = {**col_e, **col_d}
+        logits = linear(params['lm_head'], x, path='lm_head', col=col,
+                        taps=taps, capture=capture, compute_dtype=cfg.cdtype)
+        n = b * s + batch['embeds'].shape[0] * batch['embeds'].shape[1]
+        return cross_entropy(logits, batch['labels']), {'stats': col, 'n_tokens': n}
+
+    def init_cache(self, batch_size: int, max_seq: int, abstract: bool = False,
+                   enc_len: Optional[int] = None):
+        cfg = self.cfg
+        enc_len = enc_len if enc_len is not None else max_seq * cfg.dec_ratio
+        mk = (lambda shp, dt: jax.ShapeDtypeStruct(shp, dt)) if abstract else \
+             (lambda shp, dt: jnp.zeros(shp, dt))
+        cdt = jnp.dtype(cfg.cache_dtype)
+        kv = lambda seq: {'k': mk((self.n_dec, batch_size, seq, cfg.n_kv_heads,
+                                   cfg.head_dim), cdt),
+                          'v': mk((self.n_dec, batch_size, seq, cfg.n_kv_heads,
+                                   cfg.head_dim), cdt)}
+        return {'dec': {'self': kv(max_seq), 'cross': kv(enc_len)}}
+
+    def prefill_fn(self, params, batch):
+        """Encode + decoder prefill over the prompt tokens."""
+        cfg = self.cfg
+        enc_out, _ = self._encode(params, batch['embeds'])
+        x = embed(params['embed'], batch['tokens'], cfg.cdtype)
+        b, s = x.shape[:2]
+        cache = self.init_cache(b, s, enc_len=enc_out.shape[1])
+        x, col, new_cache = self._decode_stack(params, x, enc_out, cache=cache,
+                                               prefill=True)
+        logits = linear(params['lm_head'], x[:, -1:, :], path='lm_head',
+                        col=col, compute_dtype=cfg.cdtype)
+        return logits[:, 0], new_cache
+
+    def decode_fn(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = embed(params['embed'], tokens[:, None], cfg.cdtype)
+        x, col, new_cache = self._decode_stack(params, x, None, cache=cache,
+                                               cache_pos=pos)
+        logits = linear(params['lm_head'], x, path='lm_head', col=col,
+                        compute_dtype=cfg.cdtype)
+        return logits[:, 0], new_cache

@@ -1,0 +1,244 @@
+"""Jamba-style hybrid: interleaved attention/Mamba mixers with periodic MoE.
+
+Layer ``i`` uses an attention mixer iff ``i % attn_period == attn_offset``
+(Jamba: 1 attention per 8 layers) and a MoE FFN iff
+``i % expert_period == expert_offset`` (Jamba: every other layer); all other
+FFNs are dense.  We scan over *super-blocks* of ``attn_period`` sublayers
+(each sublayer type is static inside the super-block), which keeps the HLO
+compact while allowing the heterogeneous caches.
+
+Adaptation note (DESIGN.md): Jamba's mixer is Mamba-1; we use our Mamba-2
+SSD block as the state-space mixer (same interface, MXU-friendly).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import kv as kvlib
+from repro.models import module as M
+from repro.models.attention import attention_block, attention_spec
+from repro.models.layers import embed, embed_spec, linear, linear_spec, make_norm, mlp, mlp_spec
+from repro.models.moe import moe_apply, moe_spec
+from repro.models.ssm import mamba_block, mamba_spec, ssm_dims
+from repro.models.transformer import _remat_policy, cross_entropy
+from repro.sharding.constraints import shard_activations
+
+
+class JambaLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.attn_period > 0 and cfg.n_layers % cfg.attn_period == 0
+        self.n_super = cfg.n_layers // cfg.attn_period
+
+    def _sub_is_attn(self, i: int) -> bool:
+        return i % self.cfg.attn_period == self.cfg.attn_offset
+
+    def _sub_is_moe(self, i: int) -> bool:
+        cfg = self.cfg
+        return cfg.expert_period > 0 and i % cfg.expert_period == cfg.expert_offset
+
+    def sub_spec(self, i: int) -> dict:
+        cfg = self.cfg
+        norm_spec, _ = make_norm(cfg.norm)
+        spec = {'norm1': norm_spec(cfg.d_model, cfg.pdtype),
+                'norm2': norm_spec(cfg.d_model, cfg.pdtype)}
+        if self._sub_is_attn(i):
+            spec['attn'] = attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                          cfg.head_dim, cfg.pdtype, cfg.qkv_bias)
+        else:
+            spec['mixer'] = mamba_spec(cfg.d_model, expand=cfg.ssm_expand,
+                                       headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                                       d_conv=cfg.ssm_conv, dtype=cfg.pdtype)
+        if self._sub_is_moe(i):
+            spec['moe'] = moe_spec(cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.pdtype)
+        else:
+            spec['mlp'] = mlp_spec(cfg.d_model, cfg.d_ff, cfg.pdtype)
+        return spec
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        norm_spec, _ = make_norm(cfg.norm)
+        super_spec = {f'sub_{i}': self.sub_spec(i) for i in range(cfg.attn_period)}
+        specs = {
+            'embed': embed_spec(cfg.vocab, cfg.d_model, cfg.pdtype),
+            'blocks': M.stack_specs(super_spec, self.n_super),
+            'norm_f': norm_spec(cfg.d_model, cfg.pdtype),
+        }
+        if not cfg.tie_embeddings:
+            specs['lm_head'] = linear_spec(cfg.d_model, cfg.vocab,
+                                           ('embed', 'vocab'), cfg.pdtype)
+        return specs
+
+    def precon_paths(self) -> set[str]:
+        cfg = self.cfg
+        paths = set()
+        for i in range(cfg.attn_period):
+            base = f'blocks/sub_{i}'
+            if self._sub_is_attn(i):
+                paths |= {f'{base}/attn/{s}/w' for s in ('q', 'k', 'v', 'o')}
+            else:
+                paths |= {f'{base}/mixer/in_proj/w', f'{base}/mixer/out_proj/w'}
+            if self._sub_is_moe(i):
+                paths |= {f'{base}/moe/router/w', f'{base}/moe/gate/w',
+                          f'{base}/moe/up/w', f'{base}/moe/down/w'}
+            else:
+                paths |= {f'{base}/mlp/{s}/w' for s in ('gate', 'up', 'down')}
+        if not cfg.tie_embeddings:
+            paths.add('lm_head/w')
+        return paths
+
+    # -- sublayer ---------------------------------------------------------
+
+    def _sublayer(self, i, p, x, *, positions, col, taps, capture,
+                  cache=None, cache_pos=None, prefill: bool = False):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        kw = dict(col=col, taps=M.subtree(taps, f'sub_{i}') if taps else None,
+                  capture=capture, compute_dtype=cfg.cdtype)
+        sub_col: dict = {}
+        kw['col'] = sub_col
+        h = norm(p['norm1'], x)
+        new_cache = None
+        if self._sub_is_attn(i):
+            out, new_cache = attention_block(
+                p['attn'], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, positions=positions, causal=True,
+                rope=True, rope_theta=cfg.rope_theta, impl=cfg.attn_impl,
+                q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, cache=cache,
+                cache_pos=cache_pos, path='attn', **kw)
+        else:
+            # prefill: ignore the preallocated (zero) cache, emit a fresh one
+            out, new_cache = mamba_block(
+                p['mixer'], h, headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                d_conv=cfg.ssm_conv, chunk=cfg.ssm_chunk,
+                cache=None if prefill else cache,
+                return_cache=prefill, path='mixer', **kw)
+        x = x + out
+        h2 = norm(p['norm2'], x)
+        if self._sub_is_moe(i):
+            ff, aux = moe_apply(p['moe'], h2, top_k=cfg.top_k,
+                                capacity_factor=cfg.capacity_factor,
+                                norm_topk=cfg.norm_topk, path='moe',
+                                aux_coef=cfg.moe_aux_coef, **kw)
+        else:
+            ff, aux = mlp(p['mlp'], h2, path='mlp', **kw), jnp.zeros((), jnp.float32)
+        col.update(M.add_prefix(sub_col, f'sub_{i}'))
+        return x + ff, new_cache, aux
+
+    # -- forward ------------------------------------------------------------
+
+    def _forward(self, params, x, positions, *, taps=None, capture=None,
+                 cache=None, cache_pos=None, prefill: bool = False):
+        cfg = self.cfg
+        block_taps = M.subtree(taps, 'blocks') or {}
+        has_cache = cache is not None
+        emits_cache = has_cache or prefill
+
+        def body(carry, xs):
+            h = shard_activations(carry)
+            if has_cache:
+                bp, bt, bc = xs
+            else:
+                bp, bt = xs
+                bc = None
+            bcol: dict = {}
+            caches, auxs = {}, []
+            for i in range(cfg.attn_period):
+                sub_cache = bc.get(f'sub_{i}') if bc else None
+                h, nc, aux = self._sublayer(
+                    i, bp[f'sub_{i}'], h, positions=positions, col=bcol,
+                    taps=bt or None, capture=capture, cache=sub_cache,
+                    cache_pos=cache_pos, prefill=prefill)
+                if emits_cache and nc is not None:
+                    caches[f'sub_{i}'] = nc
+                auxs.append(aux)
+            ys = (bcol, caches, sum(auxs)) if emits_cache else (bcol, sum(auxs))
+            return h, ys
+
+        policy = _remat_policy(cfg.remat)
+        if policy is not None or cfg.remat == 'full':
+            body = jax.checkpoint(body, policy=policy)
+
+        if has_cache:
+            x, (cols, new_caches, auxs) = jax.lax.scan(
+                body, x, (params['blocks'], block_taps, cache['blocks']))
+            new_cache = {'blocks': new_caches}
+        elif prefill:
+            x, (cols, new_caches, auxs) = jax.lax.scan(
+                body, x, (params['blocks'], block_taps))
+            new_cache = {'blocks': new_caches}
+        else:
+            x, (cols, auxs) = jax.lax.scan(body, x, (params['blocks'], block_taps))
+            new_cache = None
+        return x, M.add_prefix(cols, 'blocks'), jnp.sum(auxs), new_cache
+
+    def _logits(self, params, x, col, taps, capture):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        x = norm(params['norm_f'], x)
+        if cfg.tie_embeddings:
+            return x.astype(cfg.cdtype) @ params['embed']['table'].T.astype(cfg.cdtype)
+        return linear(params['lm_head'], x, path='lm_head', col=col,
+                      taps=taps, capture=capture, compute_dtype=cfg.cdtype)
+
+    def loss_fn(self, params, taps, batch, capture: Optional[kvlib.CaptureConfig]):
+        cfg = self.cfg
+        x = embed(params['embed'], batch['tokens'], cfg.cdtype)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x, col, aux, _ = self._forward(params, x, positions, taps=taps,
+                                       capture=capture)
+        logits = self._logits(params, x, col, taps, capture)
+        return cross_entropy(logits, batch['labels']) + aux, \
+            {'stats': col, 'n_tokens': b * s}
+
+    def init_cache(self, batch_size: int, max_seq: int, abstract: bool = False):
+        cfg = self.cfg
+        d_inner, nheads, conv_ch = ssm_dims(cfg.d_model, cfg.ssm_expand,
+                                            cfg.ssm_headdim, cfg.ssm_state,
+                                            cfg.ssm_conv)
+        mk = (lambda shp, dt: jax.ShapeDtypeStruct(shp, dt)) if abstract else \
+             (lambda shp, dt: jnp.zeros(shp, dt))
+        cdt = jnp.dtype(cfg.cache_dtype)
+        blocks = {}
+        for i in range(cfg.attn_period):
+            if self._sub_is_attn(i):
+                blocks[f'sub_{i}'] = {
+                    'k': mk((self.n_super, batch_size, max_seq, cfg.n_kv_heads,
+                             cfg.head_dim), cdt),
+                    'v': mk((self.n_super, batch_size, max_seq, cfg.n_kv_heads,
+                             cfg.head_dim), cdt)}
+            else:
+                blocks[f'sub_{i}'] = {
+                    'conv': mk((self.n_super, batch_size, cfg.ssm_conv - 1,
+                                conv_ch), cdt),
+                    'ssm': mk((self.n_super, batch_size, nheads, cfg.ssm_state,
+                               cfg.ssm_headdim), jnp.float32)}
+        return {'blocks': blocks}
+
+    def prefill_fn(self, params, batch):
+        cfg = self.cfg
+        x = embed(params['embed'], batch['tokens'], cfg.cdtype)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        # attention sublayers need a cache buffer to fill during prefill
+        cache = self.init_cache(b, s)
+        # mamba sublayers build their cache from the forward; attention
+        # sublayers write into the preallocated one.
+        x, col, _, new_cache = self._forward(params, x, positions,
+                                             cache=cache, prefill=True)
+        logits = self._logits(params, x[:, -1:, :], col, None, None)
+        return logits[:, 0], new_cache
+
+    def decode_fn(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = embed(params['embed'], tokens[:, None], cfg.cdtype)
+        positions = jnp.full((tokens.shape[0], 1), pos)
+        x, col, _, new_cache = self._forward(params, x, positions,
+                                             cache=cache, cache_pos=pos)
+        logits = self._logits(params, x, col, None, None)
+        return logits[:, 0], new_cache

@@ -1,0 +1,174 @@
+"""Building-block layers: capture-aware Linear, norms, embeddings, RoPE, MLP.
+
+Every preconditionable linear goes through ``linear()`` which
+  * emits input-activation statistics (``repro.core.kv.fwd_stats``) and
+  * adds the zero *tap* whose gradient is the paper's ``b̄``
+when capture is active.  Stats/taps are keyed by the weight's parameter path
+so the optimizer can align them with gradients.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv as kvlib
+from repro.models.module import ParamSpec
+
+Collector = dict  # path -> LayerStats
+
+
+# ---------------------------------------------------------------------------
+# Linear
+
+
+def linear_spec(d_in: int, d_out: int, axes: tuple[str | None, str | None],
+                dtype=jnp.float32, bias: bool = False,
+                bias_axis: str | None = None) -> dict:
+    spec = {'w': ParamSpec((d_in, d_out), dtype, axes, init='scaled')}
+    if bias:
+        spec['b'] = ParamSpec((d_out,), dtype, (bias_axis if bias_axis is not None
+                                                else axes[1],), init='zeros')
+    return spec
+
+
+def linear(p: dict, x: jnp.ndarray, *, path: str, col: Collector,
+           taps: Optional[dict] = None,
+           capture: Optional[kvlib.CaptureConfig] = None,
+           compute_dtype=None) -> jnp.ndarray:
+    """y = x @ w (+ b) (+ tap).  x: (..., d_in), w: (d_in, d_out)."""
+    w = p['w']
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        w = w.astype(compute_dtype)
+    wpath = f'{path}/w'
+    if capture is not None and capture.a is not None:
+        col[wpath] = kvlib.fwd_stats(x, capture)
+    y = x @ w
+    if 'b' in p:
+        y = y + p['b'].astype(y.dtype)
+    if taps is not None and wpath in taps:
+        y = y + taps[wpath].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rmsnorm_spec(d: int, dtype=jnp.float32) -> dict:
+    return {'scale': ParamSpec((d,), dtype, ('embed',), init='ones')}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p['scale'].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_spec(d: int, dtype=jnp.float32) -> dict:
+    return {'scale': ParamSpec((d,), dtype, ('embed',), init='ones'),
+            'bias': ParamSpec((d,), dtype, ('embed',), init='zeros')}
+
+
+def layernorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p['scale'].astype(jnp.float32) + p['bias'].astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == 'rms':
+        return rmsnorm_spec, rmsnorm
+    if kind == 'layer':
+        return layernorm_spec, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+
+
+def embed_spec(vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {'table': ParamSpec((vocab, d), dtype, ('vocab', 'embed'),
+                               init='normal', scale=0.02)}
+
+
+def embed(p: dict, ids: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
+    t = p['table']
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (Dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU) — the dense FFN used by all LM archs
+
+
+def mlp_spec(d: int, d_ff: int, dtype=jnp.float32, bias: bool = False) -> dict:
+    return {
+        'gate': linear_spec(d, d_ff, ('embed', 'mlp'), dtype, bias),
+        'up': linear_spec(d, d_ff, ('embed', 'mlp'), dtype, bias),
+        'down': linear_spec(d_ff, d, ('mlp', 'embed'), dtype, bias),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray, *, path: str, col: Collector,
+        taps=None, capture=None, compute_dtype=None) -> jnp.ndarray:
+    kw = dict(col=col, taps=taps, capture=capture, compute_dtype=compute_dtype)
+    g = linear(p['gate'], x, path=f'{path}/gate', **kw)
+    u = linear(p['up'], x, path=f'{path}/up', **kw)
+    h = jax.nn.silu(g) * u
+    return linear(p['down'], h, path=f'{path}/down', **kw)
+
+
+def gelu_mlp_spec(d: int, d_ff: int, dtype=jnp.float32, bias: bool = True) -> dict:
+    """Whisper-style 2-layer GELU MLP."""
+    return {
+        'fc1': linear_spec(d, d_ff, ('embed', 'mlp'), dtype, bias),
+        'fc2': linear_spec(d_ff, d, ('mlp', 'embed'), dtype, bias),
+    }
+
+
+def gelu_mlp(p: dict, x: jnp.ndarray, *, path: str, col: Collector,
+             taps=None, capture=None, compute_dtype=None) -> jnp.ndarray:
+    kw = dict(col=col, taps=taps, capture=capture, compute_dtype=compute_dtype)
+    h = jax.nn.gelu(linear(p['fc1'], x, path=f'{path}/fc1', **kw))
+    return linear(p['fc2'], h, path=f'{path}/fc2', **kw)

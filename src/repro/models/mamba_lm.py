@@ -1,0 +1,140 @@
+"""Mamba2 LM (pure SSM stack — the ``ssm`` family, attention-free)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import kv as kvlib
+from repro.models import module as M
+from repro.models.layers import embed, embed_spec, linear, linear_spec, make_norm
+from repro.models.ssm import mamba_block, mamba_spec, ssm_dims
+from repro.models.transformer import _remat_policy, cross_entropy
+from repro.sharding.constraints import shard_activations
+
+
+class MambaLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def block_spec(self) -> dict:
+        cfg = self.cfg
+        norm_spec, _ = make_norm(cfg.norm)
+        return {
+            'norm': norm_spec(cfg.d_model, cfg.pdtype),
+            'mixer': mamba_spec(cfg.d_model, expand=cfg.ssm_expand,
+                                headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                                d_conv=cfg.ssm_conv, dtype=cfg.pdtype),
+        }
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        norm_spec, _ = make_norm(cfg.norm)
+        specs = {
+            'embed': embed_spec(cfg.vocab, cfg.d_model, cfg.pdtype),
+            'blocks': M.stack_specs(self.block_spec(), cfg.n_layers),
+            'norm_f': norm_spec(cfg.d_model, cfg.pdtype),
+        }
+        if not cfg.tie_embeddings:
+            specs['lm_head'] = linear_spec(cfg.d_model, cfg.vocab,
+                                           ('embed', 'vocab'), cfg.pdtype)
+        return specs
+
+    def precon_paths(self) -> set[str]:
+        paths = {'blocks/mixer/in_proj/w', 'blocks/mixer/out_proj/w'}
+        if not self.cfg.tie_embeddings:
+            paths.add('lm_head/w')
+        return paths
+
+    def _forward(self, params, x, *, taps=None, capture=None, cache=None,
+                 return_cache: bool = False):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        block_taps = M.subtree(taps, 'blocks') or {}
+        has_cache = cache is not None
+        emits_cache = has_cache or return_cache
+
+        def body(carry, xs):
+            h = shard_activations(carry)
+            if has_cache:
+                bp, bt, bc = xs
+            else:
+                bp, bt = xs
+                bc = None
+            bcol: dict = {}
+            out, new_bc = mamba_block(
+                bp['mixer'], norm(bp['norm'], h), headdim=cfg.ssm_headdim,
+                d_state=cfg.ssm_state, d_conv=cfg.ssm_conv, chunk=cfg.ssm_chunk,
+                cache=bc, return_cache=return_cache, path='mixer', col=bcol,
+                taps=bt or None, capture=capture, compute_dtype=cfg.cdtype)
+            h = h + out
+            return h, ((bcol, new_bc) if emits_cache else (bcol,))
+
+        policy = _remat_policy(cfg.remat)
+        if policy is not None or cfg.remat == 'full':
+            body = jax.checkpoint(body, policy=policy)
+
+        if has_cache:
+            x, (cols, new_caches) = jax.lax.scan(
+                body, x, (params['blocks'], block_taps, cache['blocks']),
+                unroll=cfg.scan_unroll)
+            new_cache = {'blocks': new_caches}
+        elif return_cache:
+            x, (cols, new_caches) = jax.lax.scan(
+                body, x, (params['blocks'], block_taps), unroll=cfg.scan_unroll)
+            new_cache = {'blocks': new_caches}
+        else:
+            x, (cols,) = jax.lax.scan(body, x, (params['blocks'], block_taps),
+                                      unroll=cfg.scan_unroll)
+            new_cache = None
+        return x, M.add_prefix(cols, 'blocks'), new_cache
+
+    def _logits(self, params, x, col, taps, capture):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        x = norm(params['norm_f'], x)
+        if cfg.tie_embeddings:
+            return x.astype(cfg.cdtype) @ params['embed']['table'].T.astype(cfg.cdtype)
+        return linear(params['lm_head'], x, path='lm_head', col=col,
+                      taps=taps, capture=capture, compute_dtype=cfg.cdtype)
+
+    def loss_fn(self, params, taps, batch, capture: Optional[kvlib.CaptureConfig]):
+        cfg = self.cfg
+        x = embed(params['embed'], batch['tokens'], cfg.cdtype)
+        b, s = x.shape[:2]
+        x, col, _ = self._forward(params, x, taps=taps, capture=capture)
+        logits = self._logits(params, x, col, taps, capture)
+        return cross_entropy(logits, batch['labels']), {'stats': col, 'n_tokens': b * s}
+
+    def init_cache(self, batch_size: int, max_seq: int, abstract: bool = False):
+        """SSM cache is O(1) in context length — max_seq is irrelevant."""
+        cfg = self.cfg
+        d_inner, nheads, conv_ch = ssm_dims(cfg.d_model, cfg.ssm_expand,
+                                            cfg.ssm_headdim, cfg.ssm_state,
+                                            cfg.ssm_conv)
+        mk = (lambda shp, dt: jax.ShapeDtypeStruct(shp, dt)) if abstract else \
+             (lambda shp, dt: jnp.zeros(shp, dt))
+        dt = jnp.dtype(cfg.cache_dtype)
+        return {'blocks': {
+            'conv': mk((cfg.n_layers, batch_size, cfg.ssm_conv - 1, conv_ch), dt),
+            'ssm': mk((cfg.n_layers, batch_size, nheads, cfg.ssm_state,
+                       cfg.ssm_headdim), jnp.float32),
+        }}
+
+    def prefill_fn(self, params, batch):
+        """Chunked-SSD prefill; decode cache = per-layer final state + conv tail."""
+        cfg = self.cfg
+        x = embed(params['embed'], batch['tokens'], cfg.cdtype)
+        x, col, cache = self._forward(params, x, return_cache=True)
+        logits = self._logits(params, x[:, -1:, :], col, None, None)
+        return logits[:, 0], cache
+
+    def decode_fn(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        del pos  # state-space decode is position-free
+        x = embed(params['embed'], tokens[:, None], cfg.cdtype)
+        x, col, new_cache = self._forward(params, x, cache=cache)
+        logits = self._logits(params, x, col, None, None)
+        return logits[:, 0], new_cache

@@ -1,0 +1,122 @@
+"""Minimal functional module system with logical-axis metadata.
+
+No flax on this box, and the dry-run needs shape-only initialization of
+trillion-parameter models — so params are plain nested dicts described by a
+parallel tree of ``ParamSpec`` (shape, dtype, logical axes, initializer).
+
+* ``init_params``      materializes arrays (smoke tests, examples).
+* ``abstract_params``  returns ShapeDtypeStructs (dry-run, no allocation).
+* logical axes feed the sharding resolver (``repro.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    axes: tuple[Optional[str], ...] = ()
+    init: str = 'normal'          # normal | zeros | ones | scaled
+    scale: Optional[float] = None  # stddev override
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.shape):
+            raise ValueError(f'axes {self.axes} do not match shape {self.shape}')
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_tree_map(fn: Callable[[ParamSpec], Any], specs: Any) -> Any:
+    """Map over a nested dict of ParamSpec."""
+    if isinstance(specs, dict):
+        return {k: spec_tree_map(fn, v) for k, v in specs.items()}
+    return fn(specs)
+
+
+def abstract_params(specs: Any) -> Any:
+    return spec_tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def _init_one(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == 'zeros':
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == 'ones':
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == 'normal':
+        std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+    if spec.init == 'scaled':  # fan-in scaled (1/sqrt(d_in) over dim -2)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+    raise ValueError(f'unknown init {spec.init!r}')
+
+
+def init_params(specs: Any, key) -> Any:
+    """Materialize a spec tree into arrays with split PRNG keys."""
+    flat = _flatten_specs(specs)
+    keys = jax.random.split(key, max(len(flat), 1))
+    leaves = {p: _init_one(s, k) for (p, s), k in zip(sorted(flat.items()), keys)}
+    return _unflatten(leaves)
+
+
+def _flatten_specs(specs: Any, prefix: str = '') -> dict[str, ParamSpec]:
+    out = {}
+    if isinstance(specs, dict):
+        for k, v in specs.items():
+            key = f'{prefix}/{k}' if prefix else str(k)
+            out.update(_flatten_specs(v, key))
+    else:
+        out[prefix] = specs
+    return out
+
+
+def _unflatten(flat: dict[str, Any]) -> Any:
+    out: dict[str, Any] = {}
+    for path, leaf in flat.items():
+        keys = path.split('/')
+        d = out
+        for k in keys[:-1]:
+            d = d.setdefault(k, {})
+        d[keys[-1]] = leaf
+    return out
+
+
+def flatten_specs(specs: Any) -> dict[str, ParamSpec]:
+    return _flatten_specs(specs)
+
+
+def stack_specs(specs: Any, n: int, axis_name: str = 'layer') -> Any:
+    """Add a leading stacked dim (for lax.scan over layers)."""
+    return spec_tree_map(
+        lambda s: ParamSpec((n,) + s.shape, s.dtype, (axis_name,) + s.axes,
+                            s.init, s.scale),
+        specs)
+
+
+def count_params(specs: Any) -> int:
+    return sum(math.prod(s.shape) for s in _flatten_specs(specs).values())
+
+
+def subtree(tree: Optional[dict], prefix: str) -> Optional[dict]:
+    """Select entries of a flat '/'-keyed dict under ``prefix`` (relative keys)."""
+    if tree is None:
+        return None
+    pfx = prefix + '/'
+    out = {k[len(pfx):]: v for k, v in tree.items() if k.startswith(pfx)}
+    return out or None
+
+
+def add_prefix(tree: Optional[dict], prefix: str) -> dict:
+    if not tree:
+        return {}
+    return {f'{prefix}/{k}': v for k, v in tree.items()}

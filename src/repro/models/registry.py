@@ -1,0 +1,74 @@
+"""Model registry + per-cell input specs.
+
+``build_model(cfg)`` maps config family -> model class (duck-typed:
+param_specs / precon_paths / loss_fn / prefill_fn / decode_fn / init_cache).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch × shape) cell — weak-type-correct, shardable, no
+device allocation — exactly what ``jit(...).lower()`` consumes in the
+dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import JambaLM
+from repro.models.mamba_lm import MambaLM
+from repro.models.transformer import TransformerLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ('dense', 'moe', 'vlm'):
+        return TransformerLM(cfg)
+    if cfg.family == 'ssm':
+        return MambaLM(cfg)
+    if cfg.family == 'hybrid':
+        return JambaLM(cfg)
+    if cfg.family == 'encdec':
+        return EncDecLM(cfg)
+    raise ValueError(f'unknown family {cfg.family!r}')
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeCell) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == 'encdec':
+        dec = s // cfg.dec_ratio
+        return {'embeds': _sds((b, s, cfg.d_model), cfg.cdtype),
+                'tokens': _sds((b, dec), jnp.int32),
+                'labels': _sds((b, dec), jnp.int32)}
+    if cfg.input_is_embeds:
+        return {'embeds': _sds((b, s, cfg.d_model), cfg.cdtype),
+                'labels': _sds((b, s), jnp.int32)}
+    return {'tokens': _sds((b, s), jnp.int32),
+            'labels': _sds((b, s), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeCell) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == 'encdec':
+        dec = s // cfg.dec_ratio
+        return {'embeds': _sds((b, s, cfg.d_model), cfg.cdtype),
+                'tokens': _sds((b, dec), jnp.int32)}
+    if cfg.input_is_embeds:
+        return {'embeds': _sds((b, s, cfg.d_model), cfg.cdtype)}
+    return {'tokens': _sds((b, s), jnp.int32)}
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeCell):
+    """Returns (cache_specs, tokens_spec, pos_spec)."""
+    b, s = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    if cfg.family == 'encdec':
+        cache = model.init_cache(b, s // cfg.dec_ratio, abstract=True, enc_len=s)
+    else:
+        cache = model.init_cache(b, s, abstract=True)
+    return cache, _sds((b,), jnp.int32), _sds((), jnp.int32)

@@ -1,0 +1,86 @@
+"""Simple fully-connected models: the paper's 8-layer autoencoder (§5.1,
+Fig. 4) and an MLP classifier (stand-in for the paper's CNN benchmarks —
+DESIGN.md §8).  These are the only models supporting *full* taps
+(K-FAC/FOOF's ``b_outer``/``a_outer`` capture), since the cost of
+materializing per-token cotangents is K-FAC's own baseline cost.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv as kvlib
+from repro.models import module as M
+from repro.models.layers import linear, linear_spec
+
+
+class MLP:
+    """dims = [in, h1, ..., out]; relu hidden activations."""
+
+    def __init__(self, dims: Sequence[int], final_activation: Optional[str] = None,
+                 dtype=jnp.float32):
+        self.dims = tuple(dims)
+        self.final_activation = final_activation
+        self.dtype = dtype
+
+    def param_specs(self) -> dict:
+        return {f'fc{i}': linear_spec(self.dims[i], self.dims[i + 1],
+                                      (None, None), self.dtype, bias=True)
+                for i in range(len(self.dims) - 1)}
+
+    def precon_paths(self) -> set[str]:
+        return {f'fc{i}/w' for i in range(len(self.dims) - 1)}
+
+    def make_taps(self, batch_size: int,
+                  capture: kvlib.CaptureConfig) -> Optional[dict]:
+        """Vector taps (d_out,) or full taps (batch, d_out) per layer."""
+        if not capture.needs_taps:
+            return None
+        taps = {}
+        for i in range(len(self.dims) - 1):
+            d_out = self.dims[i + 1]
+            shape = (d_out,) if capture.b == 'mean' else (batch_size, d_out)
+            taps[f'fc{i}/w'] = jnp.zeros(shape, jnp.float32)
+        return taps
+
+    def apply(self, params, x, taps=None, capture=None):
+        col: dict = {}
+        n = len(self.dims) - 1
+        for i in range(n):
+            x = linear(params[f'fc{i}'], x, path=f'fc{i}', col=col,
+                       taps=taps, capture=capture)
+            if i < n - 1:
+                x = jax.nn.relu(x)
+        if self.final_activation == 'sigmoid':
+            x = jax.nn.sigmoid(x)
+        return x, col
+
+
+def autoencoder(hidden: Sequence[int] = (1000, 500, 250, 30, 250, 500, 1000),
+                d_in: int = 784) -> MLP:
+    """The paper's 8-layer autoencoder (§5.1)."""
+    return MLP([d_in, *hidden, d_in], final_activation='sigmoid')
+
+
+def ae_loss_fn(model: MLP):
+    def loss_fn(params, taps, batch, capture):
+        recon, col = model.apply(params, batch['x'], taps=taps, capture=capture)
+        x = batch['x']
+        # binary cross-entropy (x in [0,1]) as in deep-AE benchmarks
+        eps = 1e-6
+        r = jnp.clip(recon.astype(jnp.float32), eps, 1 - eps)
+        loss = -jnp.mean(x * jnp.log(r) + (1 - x) * jnp.log(1 - r))
+        return loss, {'stats': col, 'n_tokens': x.shape[0]}
+    return loss_fn
+
+
+def classifier_loss_fn(model: MLP):
+    def loss_fn(params, taps, batch, capture):
+        logits, col = model.apply(params, batch['x'], taps=taps, capture=capture)
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch['y'][:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold), {'stats': col, 'n_tokens': logits.shape[0]}
+    return loss_fn

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD — state-space duality) block, TPU-adapted.
+
+The SSD algorithm is implemented in its *chunked matmul* form (intra-chunk
+attention-like matmuls + inter-chunk state recurrence via ``lax.scan``) —
+exactly the decomposition that maps the recurrence onto the MXU instead of a
+long sequential scan; chunk length is a config knob (§Perf lever).
+
+Preconditioning: ``in_proj`` / ``out_proj`` are capture-aware linears (Eva
+applies); conv/A_log/D/dt_bias are SSM-internal → first-order fall-through
+(paper's rule for non-linear-layer params).
+
+Decode is O(1) in context length: the entire 500k-token history lives in the
+(H, N, P) state + (k-1)-deep conv buffer — this is why mamba2/jamba are the
+``long_500k`` archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear, linear_spec, rmsnorm
+from repro.models.module import ParamSpec
+from repro.sharding.constraints import constrain
+
+
+def ssm_dims(d_model: int, expand: int = 2, headdim: int = 64,
+             d_state: int = 128, d_conv: int = 4):
+    d_inner = expand * d_model
+    nheads = d_inner // headdim
+    conv_ch = d_inner + 2 * d_state  # x + B + C (ngroups=1)
+    return d_inner, nheads, conv_ch
+
+
+def mamba_spec(d_model: int, *, expand: int = 2, headdim: int = 64,
+               d_state: int = 128, d_conv: int = 4, dtype=jnp.float32) -> dict:
+    d_inner, nheads, conv_ch = ssm_dims(d_model, expand, headdim, d_state, d_conv)
+    d_in_proj = 2 * d_inner + 2 * d_state + nheads  # z, x, B, C, dt
+    return {
+        'in_proj': linear_spec(d_model, d_in_proj, ('embed', 'inner'), dtype),
+        'conv_w': ParamSpec((d_conv, conv_ch), dtype, (None, 'inner'), init='scaled'),
+        'conv_b': ParamSpec((conv_ch,), dtype, ('inner',), init='zeros'),
+        'A_log': ParamSpec((nheads,), jnp.float32, ('heads',), init='ones'),
+        'dt_bias': ParamSpec((nheads,), jnp.float32, ('heads',), init='zeros'),
+        'D': ParamSpec((nheads,), jnp.float32, ('heads',), init='ones'),
+        'norm': {'scale': ParamSpec((d_inner,), dtype, ('inner',), init='ones')},
+        'out_proj': linear_spec(d_inner, d_model, ('inner', 'embed'), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d.  x: (B, S, Ch); w: (K, Ch)."""
+    k, ch = w.shape
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),   # (K, 1, Ch) HIO for depthwise
+        window_strides=(1,), padding='VALID',
+        dimension_numbers=('NHC', 'HIO', 'NHC'),
+        feature_group_count=ch)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, d_skip, chunk: int = 128):
+    """SSD forward.  x: (B,S,H,P); dt: (B,S,H); a: (H,) (negative);
+    bmat/cmat: (B,S,N); d_skip: (H,).  Returns (y, final_state (B,H,N,P))."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # right-pad with dt=0 steps: exp(dt·A)=1 and dt·B·x=0, so padded
+        # positions are identities on the carried state (outputs sliced off)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    s_padded = s + pad
+    nc = s_padded // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = bmat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = cmat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    dta = dtc * a[None, None, None, :]                       # (b,c,q,h) ≤ 0
+    seg = jnp.cumsum(dta, axis=2)                            # within-chunk cumsum
+    total = seg[:, :, -1, :]                                 # (b,c,h)
+
+    # intra-chunk (attention-like): L[q,k] = exp(seg_q - seg_k) for q >= k
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # (b,c,q,k,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    l_mat = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum('bcqn,bckn->bcqk', cc, bc)
+    m = cb[..., None] * l_mat * dtc[:, :, None, :, :]        # (b,c,q,k,h)
+    y_intra = jnp.einsum('bcqkh,bckhp->bcqhp', m, xc)
+
+    # chunk -> carried state:  S_c = Σ_k exp(total - seg_k)·dt_k·B_k ⊗ x_k
+    decay_out = jnp.exp(total[:, :, None, :] - seg)          # (b,c,q,h)
+    s_chunk = jnp.einsum('bckn,bckh,bckhp->bchnp', bc, decay_out * dtc, xc)
+
+    # inter-chunk recurrence
+    def step(state, xs):
+        s_c, tot_c = xs                                      # (b,h,n,p), (b,h)
+        new = state * jnp.exp(tot_c)[:, :, None, None] + s_c
+        return new, state                                    # emit state *entering* chunk
+
+    init = jnp.zeros((bsz, h, n, p), jnp.float32)
+    final, states_in = jax.lax.scan(
+        step, init, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)                # (b,c,h,n,p)
+
+    y_inter = jnp.einsum('bcqn,bchnp,bcqh->bcqhp', cc, states_in, jnp.exp(seg))
+    y = (y_intra + y_inter).reshape(bsz, s_padded, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    if pad:
+        y = y[:, :s]
+    return y.astype(x.dtype), final
+
+
+def mamba_block(p, x, *, headdim: int = 64, d_state: int = 128,
+                d_conv: int = 4, chunk: int = 128,
+                cache: Optional[dict] = None, return_cache: bool = False,
+                path: str = '', col=None,
+                taps=None, capture=None, compute_dtype=None):
+    """Returns (y, new_cache).  cache = {'conv': (B,K-1,Ch), 'ssm': (B,H,N,P)}.
+    ``return_cache=True`` (prefill) emits the cache from a cache-free forward:
+    final SSD state + last (K-1) pre-conv inputs."""
+    col = col if col is not None else {}
+    bsz, s, d_model = x.shape
+    d_inner = p['norm']['scale'].shape[0]
+    nheads = p['A_log'].shape[0]
+    kw = dict(col=col, taps=taps, capture=capture, compute_dtype=compute_dtype)
+
+    zxbcdt = linear(p['in_proj'], x, path=f'{path}/in_proj', **kw)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+
+    if cache is None:
+        xbc_raw = xbc
+        xbc = jax.nn.silu(_causal_conv(xbc, p['conv_w'], p['conv_b']))
+    else:
+        # decode: roll the conv buffer (S == 1)
+        buf = jnp.concatenate([cache['conv'], xbc.astype(cache['conv'].dtype)], axis=1)
+        w = p['conv_w'].astype(jnp.float32)
+        conv_out = jnp.einsum('bkc,kc->bc', buf.astype(jnp.float32), w) + p['conv_b']
+        xbc = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+        new_conv = buf[:, 1:, :]
+
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    xh = xs.reshape(bsz, s, nheads, headdim)
+    # SSD heads are a pure batch dim of the chunk einsums: pin them to the
+    # model axis so the intra-chunk matmuls shard instead of replicating
+    # (§Perf: jamba's compute term was 16× inflated without this anchor)
+    xh = constrain(xh, 'data', None, 'model', None)
+    a = -jnp.exp(p['A_log'].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p['dt_bias'][None, None, :])
+    dt = constrain(dt, 'data', None, 'model')
+
+    if cache is None:
+        y, final_state = ssd_chunked(xh, dt, a, bmat, cmat,
+                                     p['D'].astype(jnp.float32), chunk=chunk)
+        new_cache = None
+        if return_cache:
+            pad = d_conv - 1
+            tail = xbc_raw[:, -pad:, :] if s >= pad else jnp.pad(
+                xbc_raw, ((0, 0), (pad - s, 0), (0, 0)))
+            new_cache = {'conv': tail, 'ssm': final_state}
+    else:
+        # recurrent single-step update
+        da = jnp.exp(dt[:, 0, :] * a[None, :])               # (B,H)
+        dbx = jnp.einsum('bn,bh,bhp->bhnp', bmat[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        state = cache['ssm'] * da[:, :, None, None] + dbx
+        y0 = jnp.einsum('bn,bhnp->bhp', cmat[:, 0].astype(jnp.float32), state)
+        y0 = y0 + xh[:, 0].astype(jnp.float32) * p['D'][None, :, None]
+        y = y0[:, None].astype(x.dtype)
+        new_cache = {'conv': new_conv, 'ssm': state.astype(cache['ssm'].dtype)}
+
+    y = y.reshape(bsz, s, d_inner)
+    y = rmsnorm(p['norm'], y.astype(x.dtype) * jax.nn.silu(z).astype(x.dtype))
+    return linear(p['out_proj'], y, path=f'{path}/out_proj', **kw), new_cache

@@ -1,0 +1,206 @@
+"""Logical-axis → mesh-axis resolution with divisibility fallback.
+
+Every ParamSpec carries logical axis names; RULES lists candidate mesh axes
+per logical axis in priority order.  The resolver takes the first candidate
+that (a) exists in the mesh, (b) divides the dimension, and (c) doesn't
+reuse a mesh axis already consumed by another dim of the same tensor.
+Indivisible dims fall back to the next candidate or replication — this is
+what lets qwen2's 14 heads, whisper's 51865 vocab or jamba's kv=8 coexist
+with a 16-way model axis (decisions are recorded; the dry-run prints them).
+
+Design: FSDP over 'data', TP/EP over 'model', pure DP across 'pod' (no
+parameter sharding over the cross-pod DCN axis).
+
+Optimizer state is sharded by *mirroring*: momentum/Adam moments match the
+param spec exactly; KV stats (ā: drop-last-dim, b̄: drop-second-last) and
+KF outers inherit the matching weight-dim assignment by shape inference.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import kv as kvlib
+from repro.models import module as M
+
+# logical axis -> mesh-axis candidates, in priority order
+RULES: dict[Optional[str], tuple[str, ...]] = {
+    'vocab': ('model',),
+    'embed': ('data',),     # FSDP
+    'mlp': ('model',),
+    'heads': ('model',),
+    'kv_heads': ('model',),
+    'expert': ('model',),
+    'inner': ('model',),    # mamba d_inner / in_proj fused dim
+    'state': (),
+    'layer': (),            # scan axis: never shard
+    'conv': (),
+    None: (),
+}
+
+
+def resolve_pspec(shape: tuple[int, ...], axes: tuple[Optional[str], ...],
+                  mesh: Mesh, log: Optional[list] = None) -> P:
+    assert len(shape) == len(axes), (shape, axes)
+    used: set[str] = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        assigned = None
+        for cand in RULES.get(ax, ()):
+            if cand not in mesh.shape:
+                continue
+            if cand in used:
+                continue
+            if dim % mesh.shape[cand] != 0:
+                if log is not None:
+                    log.append(f'  fallback: dim {dim} (axis {ax!r}) not '
+                               f'divisible by {cand}={mesh.shape[cand]}')
+                continue
+            assigned = cand
+            used.add(cand)
+            break
+        out.append(assigned)
+    return P(*out)
+
+
+def param_shardings(specs: Any, mesh: Mesh, log: Optional[list] = None) -> Any:
+    """ParamSpec tree -> NamedSharding tree (same structure)."""
+    return M.spec_tree_map(
+        lambda s: NamedSharding(mesh, resolve_pspec(s.shape, s.axes, mesh, log)),
+        specs)
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ('pod', 'data') if a in mesh.shape)
+
+
+def batch_pspec(shape: tuple[int, ...], mesh: Mesh,
+                seq_dim: Optional[int] = 1) -> P:
+    """Shard dim 0 over (pod, data) when divisible; else (for batch=1
+    long-context cells) shard the sequence dim over 'data'."""
+    daxes = _data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    specs: list = [None] * len(shape)
+    if shape and shape[0] % dsize == 0 and shape[0] > 0:
+        specs[0] = daxes if len(daxes) > 1 else daxes[0]
+    elif (seq_dim is not None and len(shape) > seq_dim
+          and shape[seq_dim] % mesh.shape.get('data', 1) == 0):
+        specs[seq_dim] = 'data'
+    return P(*specs)
+
+
+def input_shardings(tree: Any, mesh: Mesh, seq_dim: Optional[int] = 1) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, batch_pspec(x.shape, mesh, seq_dim)),
+        tree)
+
+
+def cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    """KV/SSM cache leaves: (L, B, S, KV, Dh) / (L, B, H, N, P) / (L, B, K, Ch).
+    Batch -> (pod,data) when divisible, else seq -> data; one model-axis dim
+    among the trailing dims when divisible."""
+    daxes = _data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    msize = mesh.shape.get('model', 1)
+
+    def one(x):
+        shape = x.shape
+        specs: list = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % dsize == 0:
+            specs[1] = daxes if len(daxes) > 1 else daxes[0]
+        elif len(shape) >= 3 and shape[2] % mesh.shape.get('data', 1) == 0:
+            specs[2] = 'data'   # batch=1: shard the sequence/state dim
+        # model axis preference: dim 2 (attn seq / ssm heads — decode
+        # attention then psums one small partial per layer), then the
+        # KV-heads dim, then the last dim.  Never a contraction-heavy dim
+        # first: a model-sharded head_dim would psum every score tile.
+        if msize > 1 and len(shape) >= 3:
+            for i in (2, len(shape) - 2, len(shape) - 1):
+                if i >= len(shape) or i < 2:
+                    continue
+                if specs[i] is None and shape[i] % msize == 0:
+                    specs[i] = 'model'
+                    break
+        return NamedSharding(mesh, P(*specs))
+
+    return jax.tree_util.tree_map(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state mirroring
+
+
+def mirror_pspec(param_spec: P, param_shape: tuple[int, ...],
+                 leaf_shape: tuple[int, ...]) -> P:
+    ps = tuple(param_spec) + (None,) * (len(param_shape) - len(tuple(param_spec)))
+    if leaf_shape == param_shape:
+        return P(*ps)
+    if len(param_shape) >= 2:
+        stack, d_in, d_out = param_shape[:-2], param_shape[-2], param_shape[-1]
+        s_stack, s_in, s_out = ps[:-2], ps[-2], ps[-1]
+        if leaf_shape == stack + (d_in,):           # a_mean / v_in
+            return P(*s_stack, s_in)
+        if leaf_shape == stack + (d_out,):          # b_mean / v_out
+            return P(*s_stack, s_out)
+        if leaf_shape == stack + (d_in, d_in):      # a_outer / m_in / p_in
+            return P(*s_stack, s_in, None)
+        if leaf_shape == stack + (d_out, d_out):    # b_outer / m_out / p_out
+            return P(*s_stack, s_out, None)
+        if leaf_shape == stack:                     # count
+            return P(*s_stack)
+    return P()
+
+
+def _path_parts(path) -> list[str]:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+    return parts
+
+
+def opt_state_shardings(opt_state_shapes: Any, param_specs: Any,
+                        mesh: Mesh) -> Any:
+    """NamedSharding tree for the optimizer state (same structure).
+
+    Each leaf is matched to a parameter by the longest '/'-joined suffix of
+    its key path that names a parameter (momentum subtrees end in the param
+    path; KV-stat dicts key by the full weight path), then sharded by shape
+    mirroring.  Unmatched leaves (step counters, M-FAC buffers) replicate.
+    """
+    flat_specs = M.flatten_specs(param_specs)
+    spec_by_path = {p: (resolve_pspec(s.shape, s.axes, mesh), s.shape)
+                    for p, s in flat_specs.items()}
+
+    def one(path, leaf):
+        parts = _path_parts(path)
+        # try joined suffixes, longest first, and each single part (dict keys
+        # in stats trees are full 'a/b/c/w' paths already)
+        candidates = ['/'.join(parts[i:]) for i in range(len(parts))]
+        candidates += [p for p in parts if '/' in p]
+        best = None
+        for cand in sorted(set(candidates), key=len, reverse=True):
+            if cand in spec_by_path:
+                best = cand
+                break
+        if best is None:
+            return NamedSharding(mesh, P())
+        pspec, pshape = spec_by_path[best]
+        return NamedSharding(mesh, mirror_pspec(pspec, pshape, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, opt_state_shapes)

@@ -1,0 +1,9 @@
+from repro.train.checkpoint import (AsyncCheckpointer, available_steps, gc_old,
+                                    latest_step, restore, save)
+from repro.train.step import (abstract_opt_state, compute_grads_and_stats,
+                              init_opt_state, make_train_step)
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ['AsyncCheckpointer', 'available_steps', 'gc_old', 'latest_step',
+           'restore', 'save', 'abstract_opt_state', 'compute_grads_and_stats',
+           'init_opt_state', 'make_train_step', 'Trainer', 'TrainerConfig']

@@ -1,0 +1,160 @@
+"""Checkpointing: atomic, async, keep-K, elastic-reshard on restore.
+
+Layout:
+  <dir>/step_<N>/manifest.json     — leaf paths, shapes, dtypes, user metadata
+  <dir>/step_<N>/<leaf-id>.npy     — one array per leaf (full logical array)
+  <dir>/step_<N>/.complete         — commit marker (written last)
+
+Writes go to ``step_<N>.tmp`` then ``os.rename`` — a crash mid-save never
+corrupts the latest checkpoint.  ``AsyncCheckpointer`` snapshots to host
+memory synchronously (cheap) and writes in a background thread so the train
+loop is not blocked; ``wait()`` before exit.
+
+Elastic restore: arrays are saved as full logical values and ``restore``
+takes target shardings — a checkpoint written on a (16,16) mesh restores
+onto (2,16,16) or a single CPU device unchanged (resharding happens in
+``jax.device_put``).  On a real multi-host pod this single-file strategy
+would be replaced by per-shard TensorStore writes; the manifest/commit
+protocol is unchanged (noted in DESIGN.md §8).
+
+Pytree handling: leaves are addressed by their flattened key-path string, so
+any mix of dicts / NamedTuple optimizer states round-trips; ``restore``
+fills a template pytree (from ``init``) leaf-by-leaf.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out
+
+
+def _leaf_id(i: int) -> str:
+    return f'leaf_{i:05d}'
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         metadata: Optional[dict] = None) -> Path:
+    """Synchronous atomic save of a pytree."""
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f'step_{step:08d}'
+    tmp = ckpt_dir / f'step_{step:08d}.tmp'
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves = _leaf_paths(tree)
+    manifest = {'step': step, 'metadata': metadata or {},
+                'time': time.time(), 'leaves': []}
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f'{_leaf_id(i)}.npy', arr)
+        manifest['leaves'].append({'id': _leaf_id(i), 'path': path,
+                                   'shape': list(arr.shape),
+                                   'dtype': str(arr.dtype)})
+    (tmp / 'manifest.json').write_text(json.dumps(manifest, indent=1))
+    (tmp / '.complete').write_text('ok')
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def available_steps(ckpt_dir: str | Path) -> list[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    steps = []
+    for d in ckpt_dir.iterdir():
+        m = re.fullmatch(r'step_(\d+)', d.name)
+        if m and (d / '.complete').exists():
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, template: Any,
+            shardings: Any = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``template``; optional target shardings
+    (same tree structure or a single sharding) reshard on load."""
+    d = Path(ckpt_dir) / f'step_{step:08d}'
+    manifest = json.loads((d / 'manifest.json').read_text())
+    by_path = {l['path']: l for l in manifest['leaves']}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    if shardings is not None and not isinstance(shardings, jax.sharding.Sharding):
+        shard_flat = [s for _, s in
+                      jax.tree_util.tree_flatten_with_path(shardings)[0]]
+    else:
+        shard_flat = [shardings] * len(flat)
+
+    leaves = []
+    for (path, leaf), shard in zip(flat, shard_flat):
+        key = jax.tree_util.keystr(path)
+        if key not in by_path:
+            raise KeyError(f'checkpoint missing leaf {key}')
+        arr = np.load(d / f'{by_path[key]["id"]}.npy')
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f'{key}: shape {arr.shape} != template {leaf.shape}')
+        if shard is not None:
+            leaves.append(jax.device_put(arr, shard))
+        else:
+            leaves.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest['metadata']
+
+
+def gc_old(ckpt_dir: str | Path, keep: int) -> None:
+    steps = available_steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(Path(ckpt_dir) / f'step_{s:08d}', ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, write in a background thread."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            try:
+                save(self.ckpt_dir, step, host_tree, metadata)
+                gc_old(self.ckpt_dir, self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

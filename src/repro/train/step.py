@@ -1,0 +1,148 @@
+"""Train-step factory: loss → (grads, tap-grads) → KV stats → optimizer.
+
+The returned ``train_step(params, opt_state, batch)`` is a pure function —
+jit/pjit it, donate params/opt_state, shard it with the production mesh.
+``abstract_opt_state`` mirrors the same wiring under ``eval_shape`` so the
+dry-run can lower a 1T-param step without allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv as kvlib
+from repro.core.transform import Extras, GradientTransformation, apply_updates
+
+
+def _default_make_taps(model, params, capture: kvlib.CaptureConfig):
+    if not capture.needs_taps:
+        return None
+    if hasattr(model, 'make_taps'):
+        # simple models: batch-size-dependent full taps are bound later
+        raise ValueError('models with custom make_taps need explicit taps '
+                         '(use make_train_step(..., taps_fn=...))')
+    flat = kvlib.flatten_params(params)
+    return kvlib.make_vector_taps(params, set(model.precon_paths()) & set(flat))
+
+
+def compute_grads_and_stats(model, params, batch,
+                            capture: kvlib.CaptureConfig,
+                            taps: Optional[dict] = None):
+    """Shared by train_step and abstract shape derivation."""
+    if capture.needs_taps:
+        if taps is None:
+            taps = _default_make_taps(model, params, capture)
+
+        def lf(p, t):
+            return model.loss_fn(p, t, batch, capture)
+
+        (loss, aux), (grads, tap_grads) = jax.value_and_grad(
+            lf, argnums=(0, 1), has_aux=True)(params, taps)
+    else:
+        def lf(p):
+            return model.loss_fn(p, None, batch, capture)
+
+        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        tap_grads = None
+
+    stats = None
+    if capture.active:
+        stats = kvlib.finalize_stats(aux['stats'], tap_grads, capture,
+                                     n_tokens=jnp.asarray(aux['n_tokens'],
+                                                          jnp.float32))
+    return loss, grads, stats
+
+
+def make_train_step(model, opt: GradientTransformation,
+                    capture: kvlib.CaptureConfig,
+                    taps_fn: Optional[Callable] = None,
+                    donate: bool = True,
+                    microbatches: int = 1) -> Callable:
+    """Build the pure train step.  ``taps_fn(params)`` overrides tap creation
+    (needed for full-tap K-FAC on the simple models).
+
+    ``microbatches > 1`` runs gradient accumulation: the global batch is
+    split on dim 0 and scanned, summing grads (f32) and averaging KV stats.
+    This is what bounds activation memory at the 1T-param shape cells —
+    saved-residual and MoE-dispatch peaks shrink by the microbatch factor
+    (§Perf memory iteration)."""
+
+    def grads_of(params, batch):
+        taps = taps_fn(params) if taps_fn is not None else None
+        return compute_grads_and_stats(model, params, batch, capture, taps)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                g_acc, s_acc, l_acc = carry
+                loss, grads, stats = grads_of(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+                if stats is not None:
+                    s_acc = jax.tree_util.tree_map(
+                        lambda a, s: a + s.astype(jnp.float32), s_acc, stats)
+                return (g_acc, s_acc, l_acc + loss), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            s_shapes = jax.eval_shape(
+                lambda p, b: grads_of(p, b)[2], params,
+                jax.tree_util.tree_map(lambda x: x[0], split))
+            s0 = (jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, jnp.float32), s_shapes)
+                if capture.active else None)
+            (g_sum, s_sum, l_sum), _ = jax.lax.scan(
+                acc, (g0, s0, jnp.zeros((), jnp.float32)), split)
+            inv = 1.0 / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g * inv, g_sum)
+            stats = (jax.tree_util.tree_map(lambda s: s * inv, s_sum)
+                     if s_sum is not None else None)
+            loss = l_sum * inv
+        else:
+            loss, grads, stats = grads_of(params, batch)
+
+        updates, new_opt_state = opt.update(
+            grads, opt_state, params=params,
+            extras=Extras(stats=stats, loss=loss))
+        new_params = apply_updates(params, updates)
+        grad_norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        return new_params, new_opt_state, {'loss': loss, 'grad_norm': grad_norm}
+
+    return train_step
+
+
+def init_opt_state(model, opt: GradientTransformation,
+                   capture: kvlib.CaptureConfig, params, batch,
+                   taps_fn: Optional[Callable] = None):
+    """Materialized optimizer state (examples/trainer).  ``batch`` may be
+    arrays or ShapeDtypeStructs — stats shapes come from eval_shape."""
+    if not capture.active:
+        return opt.init(params, None)
+
+    def stats_of(p, b):
+        taps = taps_fn(p) if taps_fn is not None else None
+        _, _, stats = compute_grads_and_stats(model, p, b, capture, taps)
+        return stats
+
+    stats_shapes = jax.eval_shape(stats_of, params, batch)
+    zero_stats = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), stats_shapes)
+    return opt.init(params, Extras(stats=zero_stats))
+
+
+def abstract_opt_state(model, opt: GradientTransformation,
+                       capture: kvlib.CaptureConfig, params_abstract, batch_specs,
+                       taps_fn: Optional[Callable] = None):
+    """ShapeDtypeStruct pytree of the optimizer state (dry-run path)."""
+    def init_fn(p, b):
+        return init_opt_state(model, opt, capture, p, b, taps_fn)
+    return jax.eval_shape(init_fn, params_abstract, batch_specs)

@@ -1,0 +1,112 @@
+"""Checkpoint roundtrip/async/GC/elastic-reshard + data determinism tests."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.memmap_loader import MemmapLM, write_tokens
+from repro.data.pipeline import Prefetcher
+from repro.data.synthetic import AEStream, ClassStream, LMStream
+from repro.train import checkpoint as ckpt
+
+
+def _tree():
+    return {'a': {'w': jnp.arange(12.0).reshape(3, 4)},
+            'opt': (jnp.zeros(()), {'m': jnp.ones((5,)) * 2})}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 3, t, {'next_step': 3})
+    template = jax.tree_util.tree_map(jnp.zeros_like, t)
+    restored, meta = ckpt.restore(tmp_path, 3, template)
+    assert meta['next_step'] == 3
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b)),
+        t, restored)
+
+
+def test_async_and_gc(tmp_path):
+    c = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        c.save(s, _tree(), {'next_step': s})
+    c.wait()
+    assert ckpt.available_steps(tmp_path) == [3, 4]
+    assert ckpt.latest_step(tmp_path) == 4
+
+
+def test_atomicity_incomplete_ignored(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    # simulate a crashed save: directory without the commit marker
+    (tmp_path / 'step_00000009').mkdir()
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Restore onto an explicit sharding (single-device 'mesh')."""
+    t = _tree()
+    ckpt.save(tmp_path, 1, t)
+    mesh = jax.make_mesh((1,), ('data',),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    restored, _ = ckpt.restore(tmp_path, 1,
+                               jax.tree_util.tree_map(jnp.zeros_like, t),
+                               shardings=sh)
+    assert restored['a']['w'].sharding.is_equivalent_to(sh, 2)
+
+
+def test_lm_stream_seekable_deterministic():
+    s = LMStream(vocab=64, seq_len=16, batch=4, seed=3)
+    b1 = s.batch_at(7)
+    b2 = s.batch_at(7)
+    np.testing.assert_array_equal(np.asarray(b1['tokens']),
+                                  np.asarray(b2['tokens']))
+    # labels are next-token shifted views of the same sample
+    np.testing.assert_array_equal(np.asarray(b1['tokens'][:, 1:]),
+                                  np.asarray(b1['labels'][:, :-1]))
+    assert s.bigram_ce < s.uniform_ce  # structure present
+
+
+def test_memmap_rank_disjoint(tmp_path):
+    toks = np.arange(10_000) % 251
+    write_tokens(tmp_path / 'corpus', toks)
+    world = 4
+    seen = []
+    for r in range(world):
+        ds = MemmapLM(str(tmp_path / 'corpus'), seq_len=32, batch=2,
+                      rank=r, world=world, seed=0)
+        b = ds.batch_at(0)
+        seen.append(np.asarray(b['tokens']))
+    flat = np.concatenate([s.reshape(-1) for s in seen])
+    # same step across ranks covers disjoint windows (first tokens differ)
+    firsts = [s[:, 0] for s in seen]
+    assert len({tuple(f.tolist()) for f in firsts}) == world
+    # deterministic
+    ds0 = MemmapLM(str(tmp_path / 'corpus'), seq_len=32, batch=2,
+                   rank=0, world=world, seed=0)
+    np.testing.assert_array_equal(np.asarray(ds0.batch_at(0)['tokens']),
+                                  seen[0])
+
+
+def test_prefetcher_matches_stream_and_seeks():
+    s = ClassStream(batch=4, dim=8, classes=3, seed=1)
+    p = Prefetcher(s, depth=2)
+    try:
+        for i in range(3):
+            got = p.batch_at(i)
+            want = s.batch_at(i)
+            np.testing.assert_allclose(np.asarray(got['x']),
+                                       np.asarray(want['x']))
+        got = p.batch_at(10)  # seek
+        np.testing.assert_allclose(np.asarray(got['x']),
+                                   np.asarray(s.batch_at(10)['x']))
+    finally:
+        p.close()
+
+
+def test_ae_stream_range():
+    b = AEStream(batch=3).batch_at(0)
+    x = np.asarray(b['x'])
+    assert x.min() >= 0.0 and x.max() <= 1.0 and x.shape == (3, 784)

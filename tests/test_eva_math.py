@@ -1,0 +1,108 @@
+"""Eq. 13/21/23 correctness: Sherman–Morrison forms == explicit inverses
+(hypothesis sweeps over shapes/values — deliverable c, property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import precondition as pre
+
+
+@pytest.fixture(autouse=True, scope='module')
+def _x64():
+    """f64 precision for the explicit-inverse comparisons, scoped to this
+    module only (a global flip would poison int dtypes in later tests)."""
+    old = jax.config.jax_enable_x64
+    jax.config.update('jax_enable_x64', True)
+    yield
+    jax.config.update('jax_enable_x64', old)
+
+dims = st.integers(min_value=2, max_value=12)
+gammas = st.floats(min_value=1e-3, max_value=10.0)
+seeds = st.integers(min_value=0, max_value=2 ** 16)
+
+
+def _rand(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float64)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d_in=dims, d_out=dims, gamma=gammas, seed=seeds)
+def test_eva_sherman_morrison_vs_explicit(d_in, d_out, gamma, seed):
+    g = _rand(seed, d_in, d_out)
+    a = _rand(seed + 1, d_in)
+    b = _rand(seed + 2, d_out)
+    got = pre.eva_precondition(g, a, b, gamma)
+    want = pre.eva_explicit(g, a, b, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-8, rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d_in=dims, d_out=dims, gamma=gammas, seed=seeds)
+def test_eva_f_vs_explicit(d_in, d_out, gamma, seed):
+    g = _rand(seed, d_in, d_out)
+    a = _rand(seed + 1, d_in)
+    got = pre.eva_f_precondition(g, a, gamma)
+    m = np.outer(a, a) + gamma * np.eye(d_in)
+    want = np.linalg.solve(m, np.asarray(g))
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-8, rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d_in=dims, d_out=dims, gamma=gammas, seed=seeds)
+def test_eva_s_vs_explicit(d_in, d_out, gamma, seed):
+    g = _rand(seed, d_in, d_out)
+    vi, vo = pre.grad_kvs(g)
+    got = pre.eva_s_precondition(g, vi, vo, gamma)
+    want = pre.eva_explicit(g, vi, vo, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-8, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d_in=dims, d_out=dims, gamma=gammas, seed=seeds)
+def test_foof_solve(d_in, d_out, gamma, seed):
+    g = _rand(seed, d_in, d_out)
+    a = _rand(seed + 1, d_in)
+    ao = jnp.outer(a, a) + 0.1 * jnp.eye(d_in)
+    got = pre.foof_precondition(g, ao, gamma)
+    want = np.linalg.solve(np.asarray(ao) + gamma * np.eye(d_in), np.asarray(g))
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-8, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=dims, gamma=gammas, seed=seeds)
+def test_shampoo_inverse_root(d, gamma, seed):
+    """(M+γI)^{-1/4} really is the inverse 4th root."""
+    x = _rand(seed, d, d)
+    m = x @ x.T
+    r = pre._inv_proot_psd(m, gamma, 0.25)
+    m4 = np.linalg.matrix_power(np.asarray(r, np.float64), 4)
+    want = np.linalg.inv(np.asarray(m) + gamma * np.eye(d))
+    np.testing.assert_allclose(m4, want, atol=1e-6, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d_in=dims, d_out=dims, seed=seeds)
+def test_eva_gamma_limit_is_sgd(d_in, d_out, seed):
+    """γ→∞: γ·P → G (preconditioning washes out to the SGD direction)."""
+    g = _rand(seed, d_in, d_out)
+    a = _rand(seed + 1, d_in)
+    b = _rand(seed + 2, d_out)
+    gamma = 1e8
+    p = pre.eva_precondition(g, a, b, gamma)
+    np.testing.assert_allclose(np.asarray(p) * gamma, np.asarray(g),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d_in=dims, d_out=dims, gamma=gammas, seed=seeds)
+def test_eva_preserves_descent(d_in, d_out, gamma, seed):
+    """pᵀg ≥ 0: (C+γI)^{-1} is PD so preconditioning keeps descent."""
+    g = _rand(seed, d_in, d_out)
+    a = _rand(seed + 1, d_in)
+    b = _rand(seed + 2, d_out)
+    p = pre.eva_precondition(g, a, b, gamma)
+    assert float(jnp.sum(p * g)) >= -1e-9

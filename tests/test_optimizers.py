@@ -1,0 +1,85 @@
+"""Every registry optimizer trains the AE/classifier; ablations behave
+as the paper reports (momentum / KL-clip / KVs matter — Table 9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kv as kvlib
+from repro.core.eva import eva
+from repro.core.registry import make_optimizer, optimizer_names
+from repro.data.synthetic import ClassStream
+from repro.models import module as M
+from repro.models.simple import MLP, classifier_loss_fn
+from repro.train.step import init_opt_state, make_train_step
+
+STREAM = ClassStream(batch=64, dim=16, classes=4, spread=1.5, seed=0)
+
+
+def _train(opt, capture, steps=25, model=None, taps_batch=64, seed=0):
+    model = model or MLP([16, 32, 32, 4])
+    model.loss_fn = classifier_loss_fn(model)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(seed))
+    taps_fn = (lambda p: model.make_taps(taps_batch, capture)) \
+        if capture.needs_taps else None
+    state = init_opt_state(model, opt, capture, params, STREAM.batch_at(0),
+                           taps_fn=taps_fn)
+    step = jax.jit(make_train_step(model, opt, capture, taps_fn=taps_fn))
+    first = last = None
+    for i in range(steps):
+        params, state, m = step(params, state, STREAM.batch_at(i))
+        if first is None:
+            first = float(m['loss'])
+        last = float(m['loss'])
+    return first, last
+
+
+@pytest.mark.parametrize('name', optimizer_names())
+def test_optimizer_reduces_loss(name):
+    kw = {'m': 8} if name == 'mfac' else {}
+    lr = {'adamw': 1e-3, 'adagrad': 0.02, 'mfac': 0.01}.get(name, 0.03)
+    opt, capture = make_optimizer(name, lr=lr, **kw)
+    first, last = _train(opt, capture)
+    assert np.isfinite(last), name
+    assert last < first, f'{name}: {first} -> {last}'
+
+
+def test_ablation_kl_clip_matters():
+    """Without KL clip a hot LR diverges or regresses; with it, trains."""
+    hot = 2.0
+    _, with_clip = _train(*(eva(lr=hot, kl_kappa=1e-3), kvlib.EVA_CAPTURE))
+    _, without = _train(*(eva(lr=hot, kl_kappa=None), kvlib.EVA_CAPTURE))
+    assert with_clip < 1.4  # still trains
+    assert (not np.isfinite(without)) or without > with_clip
+
+
+def test_ablation_momentum_matters():
+    _, with_m = _train(*(eva(lr=0.03, momentum=0.9), kvlib.EVA_CAPTURE))
+    _, without = _train(*(eva(lr=0.03, momentum=0.0), kvlib.EVA_CAPTURE))
+    assert with_m <= without + 1e-3
+
+
+def test_eva_tracks_kfac():
+    """Paper's core claim at micro-scale: Eva ≈ K-FAC ≤ SGD at equal steps."""
+    o1, c1 = make_optimizer('eva', lr=0.05)
+    o2, c2 = make_optimizer('kfac', lr=0.05)
+    o3, c3 = make_optimizer('sgd', lr=0.05)
+    _, l_eva = _train(o1, c1, steps=40)
+    _, l_kfac = _train(o2, c2, steps=40)
+    _, l_sgd = _train(o3, c3, steps=40)
+    assert l_eva <= l_sgd * 1.05
+    assert abs(l_eva - l_kfac) / max(l_kfac, 1e-6) < 0.6
+
+
+def test_interval_staleness_tradeoff():
+    """A stale K-FAC preconditioner must not break convergence: both
+    interval=1 and interval=20 drive this task to (near) the loss floor.
+    (At this micro-scale both variants fully converge, so comparing the
+    residual losses is numerical noise — the Fig. 6 time/quality trade-off
+    is measured at a fixed budget in benchmarks/fig6_interval.py.)"""
+    o1, c = make_optimizer('kfac', lr=0.05, interval=1)
+    o2, _ = make_optimizer('kfac', lr=0.05, interval=20)
+    _, fresh = _train(o1, c, steps=30)
+    _, stale = _train(o2, c, steps=30)
+    assert np.isfinite(fresh) and fresh < 0.5
+    assert np.isfinite(stale) and stale < 0.5
