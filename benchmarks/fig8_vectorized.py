@@ -1,10 +1,21 @@
 """Paper Fig. 8 + §5.6: vectorized algorithms track their originals.
 
 Eva-f vs FOOF and Eva-s vs Shampoo on the autoencoder task: final losses
-should be close (derived ratio ≈ 1), at a fraction of the step time."""
+should be close (derived ratio ≈ 1), at a fraction of the step time.
+
+``--bucketed`` adds an end-to-end comparison on a deep *uniform* MLP (the
+bucketing engine's best case: 12 same-shape hidden layers collapse into one
+bucket): full eva train-step time with the bucketed ``precondition_tree``
+engine vs a reference per-path Python-loop preconditioner (the pre-bucketing
+repo state), plus the launch counts.
+"""
 from __future__ import annotations
 
-from benchmarks.common import emit
+import argparse
+
+import jax
+
+from benchmarks.common import emit, time_fn
 from benchmarks.fig4_autoencoder import train_one
 
 
@@ -20,3 +31,82 @@ def run() -> None:
         lo, to = results[orig]
         emit(f'fig8/{vec}_vs_{orig}', 0.0,
              f'loss_ratio={lv / max(lo, 1e-9):.3f};speedup={to / max(tv, 1e-9):.2f}x')
+
+
+def run_bucketed() -> None:
+    from repro.core import bucketing
+    from repro.core import kv as kvlib
+    from repro.core import precondition as pre
+    from repro.core.clipping import kl_clip_trace
+    from repro.core.eva import eva_preconditioner, _extract
+    from repro.core.transform import (GradientTransformation, chain,
+                                      scale_by_schedule)
+    from repro.data.synthetic import ClassStream
+    from repro.models import module as M
+    from repro.models.simple import MLP, classifier_loss_fn
+    from repro.train.step import init_opt_state, make_train_step
+
+    def per_path_eva_preconditioner(gamma=0.03, kv_decay=0.95):
+        """The pre-bucketing per-path dict loop, kept as the baseline."""
+        fields = ('a_mean', 'b_mean')
+
+        def init(params, extras=None):
+            from repro.core.eva import _zeros_like_spec, EvaState
+            return EvaState(running=kvlib.init_running(
+                _zeros_like_spec(_extract(extras.stats, fields))))
+
+        def update(updates, state, params=None, extras=None):
+            fresh = _extract(extras.stats, fields)
+            stats, running = kvlib.update_running(state.running, fresh, kv_decay)
+            flat = kvlib.flatten_params(updates)
+            for path, st in stats.items():
+                flat[path] = pre.eva_precondition(
+                    flat[path], st.a_mean, st.b_mean, gamma)
+            from repro.core.eva import EvaState
+            return kvlib.unflatten_params(flat), EvaState(running=running)
+
+        return GradientTransformation(init, update)
+
+    dims = [64] + [256] * 12 + [10]
+    capture = kvlib.EVA_CAPTURE
+    stream = ClassStream(batch=128, dim=64, classes=10)
+    batch = stream.batch_at(0)
+    times = {}
+    for mode in ('per_path', 'bucketed'):
+        model = MLP(dims)
+        model.loss_fn = classifier_loss_fn(model)
+        params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+        precon = (eva_preconditioner() if mode == 'bucketed'
+                  else per_path_eva_preconditioner())
+        opt = chain(precon, kl_clip_trace(1e-3, 0.03, 0.9),
+                    scale_by_schedule(lambda _: 0.03))
+        taps_fn = lambda p: model.make_taps(128, capture)  # noqa: E731
+        state = init_opt_state(model, opt, capture, params, batch,
+                               taps_fn=taps_fn)
+        step = jax.jit(make_train_step(model, opt, capture, taps_fn=taps_fn))
+        times[mode] = time_fn(step, params, state, batch)
+    flat = kvlib.flatten_params(M.abstract_params(MLP(dims).param_specs()))
+    weights = {p: s for p, s in flat.items() if p.endswith('/w')}
+    n_buckets = len(bucketing.build_plan(weights).buckets)
+    emit('fig8/bucketed/mlp13/per_path', times['per_path'],
+         f'launches={len(weights)}')
+    emit('fig8/bucketed/mlp13/bucketed', times['bucketed'],
+         f'launches={n_buckets};step_speedup='
+         f'{times["per_path"] / max(times["bucketed"], 1e-9):.2f}x')
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument('--bucketed', action='store_true',
+                    help='bucketed-engine vs per-path-loop step time on a '
+                         'deep uniform MLP')
+    args = ap.parse_args()
+    print('name,us_per_call,derived')
+    if args.bucketed:
+        run_bucketed()
+    else:
+        run()
+
+
+if __name__ == '__main__':
+    main()

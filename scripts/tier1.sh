@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify — the exact command from ROADMAP.md.
+# Run from the repo root; any extra args are passed through to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -5,8 +5,11 @@ Public surface:
   eva / eva_f / eva_s / kfac / foof / shampoo / mfac / sgd / adagrad / adamw
   kv: capture machinery;  precondition: Sherman-Morrison math
 """
-from repro.core import kv, precondition, transform
-from repro.core.clipping import graft_to_grad_magnitude, kl_clip, kl_normalize
+from repro.core import bucketing, kv, precondition, transform
+from repro.core.bucketing import BucketPlan, build_plan
+from repro.core.clipping import (graft_to_grad_magnitude, kl_clip,
+                                 kl_clip_trace, kl_normalize)
+from repro.core.precondition import precondition_tree
 from repro.core.eva import eva, eva_preconditioner
 from repro.core.eva_f import eva_f, eva_f_preconditioner
 from repro.core.eva_s import eva_s, eva_s_preconditioner
@@ -19,10 +22,12 @@ from repro.core.shampoo import shampoo, shampoo_preconditioner
 from repro.core.transform import Extras, GradientTransformation, apply_updates, chain
 
 __all__ = [
+    'bucketing', 'BucketPlan', 'build_plan', 'precondition_tree',
     'kv', 'precondition', 'transform', 'Extras', 'GradientTransformation',
     'apply_updates', 'chain', 'make_optimizer', 'optimizer_names', 'capture_for',
     'eva', 'eva_f', 'eva_s', 'kfac', 'foof', 'shampoo', 'mfac',
-    'sgd', 'adagrad', 'adamw', 'kl_clip', 'kl_normalize', 'graft_to_grad_magnitude',
+    'sgd', 'adagrad', 'adamw', 'kl_clip', 'kl_clip_trace', 'kl_normalize',
+    'graft_to_grad_magnitude',
     'eva_preconditioner', 'eva_f_preconditioner', 'eva_s_preconditioner',
     'kfac_preconditioner', 'foof_preconditioner', 'shampoo_preconditioner',
     'mfac_preconditioner',

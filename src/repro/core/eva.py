@@ -3,6 +3,14 @@
 ``eva_preconditioner`` is the composable transform (running-average KVs +
 Sherman–Morrison update, Eq. 13-15); ``eva`` is the full paper optimizer:
 ``precondition → KL clip → momentum → (weight decay) → -lr``.
+
+Preconditioning is *bucketed* (``core/bucketing``): parameter paths group by
+(shape, dtype) and each bucket runs ONE broadcast/grid-folded call through
+``precondition.precondition_tree`` — no per-path Python loop.  KV running
+stats live bucket-stacked in state and EMA at bucket level; when a
+data-parallel mesh axis is live (shard_map/pmap), fresh statistics are
+psum-averaged across ('pod','data') first, making them batch-global as in
+the paper's multi-GPU setup.
 """
 from __future__ import annotations
 
@@ -11,11 +19,14 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
-from repro.core.clipping import kl_clip
+from repro.core.clipping import kl_clip_trace
 from repro.core.transform import (Extras, GradientTransformation, chain,
-                                  add_decayed_weights, scale_by_schedule, trace)
+                                  add_decayed_weights, ema_trace,
+                                  scale_by_schedule)
+from repro.sharding.constraints import pmean_stats
 
 
 class EvaState(NamedTuple):
@@ -35,30 +46,43 @@ def _extract(stats: dict, fields: tuple[str, ...]) -> dict:
     return out
 
 
+def _stats_plan(flat_updates: dict, stats: dict,
+                extras: Optional[Extras]) -> bucketing.BucketPlan:
+    """The bucket plan over the preconditioned (= captured) paths; uses the
+    plan built at init_opt_state time when threaded through Extras, else
+    re-derives it (memoized on the shape signature)."""
+    if extras is not None and extras.plan is not None:
+        return extras.plan
+    return bucketing.build_plan({p: flat_updates[p] for p in stats
+                                 if p in flat_updates})
+
+
 def eva_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
                        use_pallas: bool = False) -> GradientTransformation:
-    """Per-layer P = (G − (b̄ᵀGā)/(γ+‖ā‖²‖b̄‖²)·āb̄ᵀ)/γ with EMA'd KVs."""
+    """Bucketed P = (G − (b̄ᵀGā)/(γ+‖ā‖²‖b̄‖²)·āb̄ᵀ)/γ with EMA'd KVs."""
 
     fields = ('a_mean', 'b_mean')
 
     def init(params, extras: Extras | None = None):
-        del params
         if extras is None or extras.stats is None:
             raise ValueError('eva_preconditioner.init needs example stats '
                              '(pass Extras(stats=...) — see train.make_train_step)')
+        flat = kvlib.flatten_params(params)
+        plan = _stats_plan(flat, extras.stats, extras)
+        zeros = _zeros_like_spec(_extract(extras.stats, fields))
         return EvaState(running=kvlib.init_running(
-            _zeros_like_spec(_extract(extras.stats, fields))))
+            bucketing.gather_tree(plan, zeros)))
 
     def update(updates, state: EvaState, params=None, extras: Extras | None = None):
         del params
-        fresh = _extract(extras.stats, fields)
-        stats, running = kvlib.update_running(state.running, fresh, kv_decay)
         flat = kvlib.flatten_params(updates)
-        for path, st in stats.items():
-            g = flat[path]
-            flat[path] = pre.eva_precondition(
-                g, st.a_mean, st.b_mean, gamma, use_pallas=use_pallas)
-        return kvlib.unflatten_params(flat), EvaState(running=running)
+        fresh_flat = _extract(extras.stats, fields)
+        plan = _stats_plan(flat, fresh_flat, extras)
+        fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
+        stats, running = kvlib.update_running(state.running, fresh, kv_decay)
+        out = pre.precondition_tree(flat, stats, 'eva', gamma, plan=plan,
+                                    use_pallas=use_pallas)
+        return kvlib.unflatten_params(out), EvaState(running=running)
 
     return GradientTransformation(init, update)
 
@@ -75,8 +99,12 @@ def eva(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
         parts.append(add_decayed_weights(weight_decay))
     parts.append(eva_preconditioner(gamma, kv_decay, use_pallas=use_pallas))
     if kl_kappa is not None:
-        parts.append(kl_clip(kl_kappa, lr))
-    parts.append(trace(momentum, nesterov=nesterov))
+        # momentum lives INSIDE the trust region (see clipping.kl_clip_trace)
+        parts.append(kl_clip_trace(kl_kappa, lr, momentum, nesterov=nesterov))
+    else:
+        # unit-gain momentum: same equal-lr step-scale convention as every
+        # other chain in the registry (see transform.ema_trace)
+        parts.append(ema_trace(momentum, nesterov=nesterov))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

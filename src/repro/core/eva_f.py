@@ -1,18 +1,21 @@
 """Eva-f (paper §4.1): vectorized FOOF — input-side-only rank-one
-preconditioning + hyper-parameter-free KL normalization."""
+preconditioning + hyper-parameter-free KL normalization.
+
+Bucketed like ``eva``: one ``precondition_tree`` call per (shape, dtype)
+bucket, bucket-level KV EMA, distributed psum hook."""
 from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
-import jax.numpy as jnp
-
+from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
 from repro.core.clipping import kl_normalize
-from repro.core.eva import _extract, _zeros_like_spec
+from repro.core.eva import _extract, _stats_plan, _zeros_like_spec
 from repro.core.transform import (Extras, GradientTransformation, chain,
-                                  add_decayed_weights, scale_by_schedule, trace)
+                                  add_decayed_weights, ema_trace,
+                                  scale_by_schedule)
+from repro.sharding.constraints import pmean_stats
 
 
 class EvaFState(NamedTuple):
@@ -24,21 +27,24 @@ def eva_f_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
     fields = ('a_mean',)
 
     def init(params, extras: Extras | None = None):
-        del params
         if extras is None or extras.stats is None:
             raise ValueError('eva_f_preconditioner.init needs example stats')
+        flat = kvlib.flatten_params(params)
+        plan = _stats_plan(flat, extras.stats, extras)
+        zeros = _zeros_like_spec(_extract(extras.stats, fields))
         return EvaFState(running=kvlib.init_running(
-            _zeros_like_spec(_extract(extras.stats, fields))))
+            bucketing.gather_tree(plan, zeros)))
 
     def update(updates, state: EvaFState, params=None, extras: Extras | None = None):
         del params
-        fresh = _extract(extras.stats, fields)
-        stats, running = kvlib.update_running(state.running, fresh, kv_decay)
         flat = kvlib.flatten_params(updates)
-        for path, st in stats.items():
-            flat[path] = pre.eva_f_precondition(
-                flat[path], st.a_mean, gamma, use_pallas=use_pallas)
-        return kvlib.unflatten_params(flat), EvaFState(running=running)
+        fresh_flat = _extract(extras.stats, fields)
+        plan = _stats_plan(flat, fresh_flat, extras)
+        fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
+        stats, running = kvlib.update_running(state.running, fresh, kv_decay)
+        out = pre.precondition_tree(flat, stats, 'eva_f', gamma, plan=plan,
+                                    use_pallas=use_pallas)
+        return kvlib.unflatten_params(out), EvaFState(running=running)
 
     return GradientTransformation(init, update)
 
@@ -51,7 +57,7 @@ def eva_f(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
         parts.append(add_decayed_weights(weight_decay))
     parts.append(eva_f_preconditioner(gamma, kv_decay, use_pallas=use_pallas))
     parts.append(kl_normalize())
-    parts.append(trace(momentum))
+    parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

@@ -5,19 +5,25 @@ Needs **no** capture: the KVs are the gradient's own row/col means
 (v_i = mean_{-i}(G)), EMA'd over steps (the vectorized analogue of Shampoo's
 statistic accumulation; documented deviation — the paper does not specify the
 temporal treatment of v, we mirror Eq. 14-15).
+
+Bucketed: the (v_in, v_out) running means live bucket-stacked (in the
+``a_mean``/``b_mean`` LayerStats slots) and both the EMA and the rank-one
+update run once per (shape, dtype) bucket via ``precondition_tree``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
 from repro.core.clipping import graft_to_grad_magnitude
 from repro.core.transform import (Extras, GradientTransformation, chain,
-                                  add_decayed_weights, scale_by_schedule, trace)
+                                  add_decayed_weights, ema_trace,
+                                  scale_by_schedule)
 
 
 def default_precon_predicate(path: str, leaf) -> bool:
@@ -26,9 +32,7 @@ def default_precon_predicate(path: str, leaf) -> bool:
 
 
 class EvaSState(NamedTuple):
-    v_in: dict
-    v_out: dict
-    count: jnp.ndarray
+    running: kvlib.RunningStats
 
 
 def eva_s_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
@@ -38,28 +42,28 @@ def eva_s_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
     def init(params, extras: Extras | None = None):
         del extras
         flat = kvlib.flatten_params(params)
-        v_in = {p: jnp.zeros(w.shape[:-1], jnp.float32)
-                for p, w in flat.items() if predicate(p, w)}
-        v_out = {p: jnp.zeros(w.shape[:-2] + w.shape[-1:], jnp.float32)
-                 for p, w in flat.items() if predicate(p, w)}
-        return EvaSState(v_in=v_in, v_out=v_out, count=jnp.zeros((), jnp.int32))
+        plan = bucketing.build_plan(flat, predicate)
+        zeros = {
+            b.key: kvlib.LayerStats(
+                a_mean=jnp.zeros((len(b.paths),) + b.shape[:-1], jnp.float32),
+                b_mean=jnp.zeros((len(b.paths),) + b.shape[:-2] + b.shape[-1:],
+                                 jnp.float32))
+            for b in plan.buckets}
+        return EvaSState(running=kvlib.init_running(zeros))
 
     def update(updates, state: EvaSState, params=None, extras: Extras | None = None):
         del params, extras
         flat = kvlib.flatten_params(updates)
-        count = state.count + 1
-        corr = 1.0 - jnp.asarray(kv_decay, jnp.float32) ** count.astype(jnp.float32)
-        new_vi, new_vo = dict(state.v_in), dict(state.v_out)
-        for path in state.v_in:
-            g = flat[path]
-            vi, vo = pre.grad_kvs(g)
-            new_vi[path] = kv_decay * state.v_in[path] + (1 - kv_decay) * vi
-            new_vo[path] = kv_decay * state.v_out[path] + (1 - kv_decay) * vo
-            flat[path] = pre.eva_s_precondition(
-                g, new_vi[path] / corr, new_vo[path] / corr, gamma,
-                use_pallas=use_pallas)
-        return (kvlib.unflatten_params(flat),
-                EvaSState(v_in=new_vi, v_out=new_vo, count=count))
+        plan = bucketing.build_plan(flat, predicate)
+        g_b = bucketing.gather(plan, {p: flat[p] for p in plan.paths})
+        fresh = {}
+        for b in plan.buckets:
+            vi, vo = pre.grad_kvs(g_b[b.key])
+            fresh[b.key] = kvlib.LayerStats(a_mean=vi, b_mean=vo)
+        stats, running = kvlib.update_running(state.running, fresh, kv_decay)
+        out = pre.precondition_tree(flat, stats, 'eva_s', gamma, plan=plan,
+                                    use_pallas=use_pallas)
+        return kvlib.unflatten_params(out), EvaSState(running=running)
 
     return GradientTransformation(init, update)
 
@@ -72,7 +76,7 @@ def eva_s(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
         parts.append(add_decayed_weights(weight_decay))
     parts.append(eva_s_preconditioner(gamma, kv_decay, use_pallas=use_pallas))
     parts.append(graft_to_grad_magnitude())
-    parts.append(trace(momentum))
+    parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

@@ -4,7 +4,7 @@ from __future__ import annotations
 from repro.core import kv as kvlib
 from repro.core.transform import (GradientTransformation, chain,
                                   add_decayed_weights, clip_by_global_norm,
-                                  scale_by_adagrad, scale_by_adam,
+                                  ema_trace, scale_by_adagrad, scale_by_adam,
                                   scale_by_schedule, trace)
 
 
@@ -20,7 +20,10 @@ def sgd(lr=0.1, momentum: float = 0.9, weight_decay: float = 0.0,
     if grad_clip:
         parts.append(clip_by_global_norm(grad_clip))
     if momentum:
-        parts.append(trace(momentum, nesterov=nesterov))
+        # bias-corrected EMA momentum (unit steady-state gain) — the same
+        # convention as the second-order chains, so a given lr means the
+        # same step scale across every optimizer in the registry
+        parts.append(ema_trace(momentum, nesterov=nesterov))
     parts.append(scale_by_schedule(_sched(lr)))
     return chain(*parts)
 

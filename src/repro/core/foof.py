@@ -1,4 +1,9 @@
-"""FOOF baseline (paper Eq. 6): right-side K-FAC, C = I ⊗ AAᵀ."""
+"""FOOF baseline (paper Eq. 6): right-side K-FAC, C = I ⊗ AAᵀ.
+
+Bucketed: the AAᵀ EMA and the cached damped inverses live bucket-stacked;
+recomputation is one fused ``lax.map`` per bucket and application one
+batched contraction per bucket via ``precondition_tree``.
+"""
 from __future__ import annotations
 
 from typing import NamedTuple
@@ -6,13 +11,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
 from repro.core.clipping import kl_normalize
-from repro.core.eva import _extract, _zeros_like_spec
+from repro.core.eva import _extract, _stats_plan, _zeros_like_spec
 from repro.core.kfac import _damped_inv
 from repro.core.transform import (Extras, GradientTransformation, chain,
-                                  add_decayed_weights, scale_by_schedule, trace)
+                                  add_decayed_weights, ema_trace,
+                                  scale_by_schedule)
+from repro.sharding.constraints import pmean_stats
 
 
 class FoofState(NamedTuple):
@@ -26,29 +34,36 @@ def foof_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
     fields = ('a_outer',)
 
     def init(params, extras: Extras | None = None):
-        del params
         if extras is None or extras.stats is None:
             raise ValueError('foof_preconditioner.init needs example stats')
-        run = kvlib.init_running(_zeros_like_spec(_extract(extras.stats, fields)))
-        a_inv = {p: jnp.zeros_like(st.a_outer) for p, st in run.stats.items()}
+        flat = kvlib.flatten_params(params)
+        plan = _stats_plan(flat, extras.stats, extras)
+        zeros = bucketing.gather_tree(
+            plan, _zeros_like_spec(_extract(extras.stats, fields)))
+        run = kvlib.init_running(zeros)
+        a_inv = {k: jnp.zeros_like(st.a_outer) for k, st in run.stats.items()}
         return FoofState(running=run, a_inv=a_inv, count=jnp.zeros((), jnp.int32))
 
     def update(updates, state: FoofState, params=None, extras: Extras | None = None):
         del params
-        fresh = _extract(extras.stats, fields)
+        flat = kvlib.flatten_params(updates)
+        fresh_flat = _extract(extras.stats, fields)
+        plan = _stats_plan(flat, fresh_flat, extras)
+        fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
         stats, running = kvlib.update_running(state.running, fresh, kf_decay)
 
         def recompute(_):
-            return {p: _damped_inv(st.a_outer, gamma) for p, st in stats.items()}
+            return {k: pre.map_bucket(lambda m: _damped_inv(m, gamma),
+                                      st.a_outer)
+                    for k, st in stats.items()}
 
         refresh = (state.count % interval) == 0
-        a_inv = jax.lax.cond(refresh, recompute, lambda _: state.a_inv, operand=None)
+        a_inv = jax.lax.cond(refresh, recompute, lambda _: state.a_inv,
+                             operand=None)
 
-        flat = kvlib.flatten_params(updates)
-        for p in stats:
-            g = flat[p].astype(jnp.float32)
-            flat[p] = jnp.einsum('...ij,...jo->...io', a_inv[p], g).astype(flat[p].dtype)
-        return kvlib.unflatten_params(flat), FoofState(
+        ops = {k: kvlib.LayerStats(a_outer=a_inv[k]) for k in a_inv}
+        out = pre.precondition_tree(flat, ops, 'foof_cached', gamma, plan=plan)
+        return kvlib.unflatten_params(out), FoofState(
             running=running, a_inv=a_inv, count=state.count + 1)
 
     return GradientTransformation(init, update)
@@ -61,7 +76,7 @@ def foof(lr=0.1, gamma: float = 0.03, kf_decay: float = 0.95, interval: int = 1,
         parts.append(add_decayed_weights(weight_decay))
     parts.append(foof_preconditioner(gamma, kf_decay, interval))
     parts.append(kl_normalize())
-    parts.append(trace(momentum))
+    parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

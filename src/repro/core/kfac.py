@@ -4,6 +4,11 @@ KF EMAs are refreshed every step (cheap relative to the inverses); the
 explicit damped inverses are recomputed every ``interval`` steps under a
 ``lax.cond`` and cached in state — exactly the staleness trade-off the paper
 studies in Fig. 6.
+
+Bucketed: Kronecker factors, cached inverses and the EMA all live
+bucket-stacked; recomputation is one fused ``lax.map`` per bucket and the
+inverse application is one batched two-sided contraction per bucket via
+``precondition_tree`` — no per-path Python loops.
 """
 from __future__ import annotations
 
@@ -12,12 +17,15 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
-from repro.core.clipping import kl_clip
-from repro.core.eva import _extract, _zeros_like_spec
+from repro.core.clipping import kl_clip_trace
+from repro.core.eva import _extract, _stats_plan, _zeros_like_spec
 from repro.core.transform import (Extras, GradientTransformation, chain,
-                                  add_decayed_weights, scale_by_schedule, trace)
+                                  add_decayed_weights, ema_trace,
+                                  scale_by_schedule)
+from repro.sharding.constraints import pmean_stats
 
 
 class KfacState(NamedTuple):
@@ -39,26 +47,34 @@ def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
     fields = ('a_outer', 'b_outer')
 
     def init(params, extras: Extras | None = None):
-        del params
         if extras is None or extras.stats is None:
             raise ValueError('kfac_preconditioner.init needs example stats')
-        run = kvlib.init_running(_zeros_like_spec(_extract(extras.stats, fields)))
-        a_inv = {p: jnp.zeros_like(st.a_outer) for p, st in run.stats.items()}
-        b_inv = {p: jnp.zeros_like(st.b_outer) for p, st in run.stats.items()}
+        flat = kvlib.flatten_params(params)
+        plan = _stats_plan(flat, extras.stats, extras)
+        zeros = bucketing.gather_tree(
+            plan, _zeros_like_spec(_extract(extras.stats, fields)))
+        run = kvlib.init_running(zeros)
+        a_inv = {k: jnp.zeros_like(st.a_outer) for k, st in run.stats.items()}
+        b_inv = {k: jnp.zeros_like(st.b_outer) for k, st in run.stats.items()}
         return KfacState(running=run, a_inv=a_inv, b_inv=b_inv,
                          count=jnp.zeros((), jnp.int32))
 
     def update(updates, state: KfacState, params=None, extras: Extras | None = None):
         del params
-        fresh = _extract(extras.stats, fields)
+        flat = kvlib.flatten_params(updates)
+        fresh_flat = _extract(extras.stats, fields)
+        plan = _stats_plan(flat, fresh_flat, extras)
+        fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
         stats, running = kvlib.update_running(state.running, fresh, kf_decay)
+
+        def one(ao, bo):
+            gamma_r, gamma_q = pre.kfac_pi_damping(ao, bo, gamma)
+            return _damped_inv(ao, gamma_r), _damped_inv(bo, gamma_q)
 
         def recompute(_):
             a_inv, b_inv = {}, {}
-            for p, st in stats.items():
-                gamma_r, gamma_q = pre.kfac_pi_damping(st.a_outer, st.b_outer, gamma)
-                a_inv[p] = _damped_inv(st.a_outer, gamma_r)
-                b_inv[p] = _damped_inv(st.b_outer, gamma_q)
+            for k, st in stats.items():
+                a_inv[k], b_inv[k] = pre.map_bucket(one, st.a_outer, st.b_outer)
             return a_inv, b_inv
 
         def keep(_):
@@ -67,13 +83,10 @@ def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
         refresh = (state.count % interval) == 0
         a_inv, b_inv = jax.lax.cond(refresh, recompute, keep, operand=None)
 
-        flat = kvlib.flatten_params(updates)
-        for p in stats:
-            g = flat[p].astype(jnp.float32)
-            out = jnp.einsum('...ij,...jo->...io', a_inv[p], g)
-            out = jnp.einsum('...io,...oj->...ij', out, b_inv[p])
-            flat[p] = out.astype(flat[p].dtype)
-        return kvlib.unflatten_params(flat), KfacState(
+        ops = {k: kvlib.LayerStats(a_outer=a_inv[k], b_outer=b_inv[k])
+               for k in a_inv}
+        out = pre.precondition_tree(flat, ops, 'kfac_cached', gamma, plan=plan)
+        return kvlib.unflatten_params(out), KfacState(
             running=running, a_inv=a_inv, b_inv=b_inv, count=state.count + 1)
 
     return GradientTransformation(init, update)
@@ -87,8 +100,12 @@ def kfac(lr=0.1, gamma: float = 0.03, kf_decay: float = 0.95,
         parts.append(add_decayed_weights(weight_decay))
     parts.append(kfac_preconditioner(gamma, kf_decay, interval))
     if kl_kappa is not None:
-        parts.append(kl_clip(kl_kappa, lr))
-    parts.append(trace(momentum))
+        # momentum lives INSIDE the trust region (see clipping.kl_clip_trace)
+        parts.append(kl_clip_trace(kl_kappa, lr, momentum))
+    else:
+        # unit-gain momentum: same equal-lr step-scale convention as every
+        # other chain in the registry (see transform.ema_trace)
+        parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

@@ -224,6 +224,12 @@ def finalize_stats(forward: dict[str, LayerStats],
 
 # ---------------------------------------------------------------------------
 # Running averages of stats (paper Eq. 14-15, bias-corrected)
+#
+# The tree under ``stats`` may be keyed per-path ({'layer/w': LayerStats})
+# or — as the bucketed optimizers store it — per-bucket
+# ({'f32_16x32': LayerStats(stacked fields)}, see ``core/bucketing``).  The
+# EMA below is a tree_map, so the bucketed form turns per-path scalar-decay
+# ops into ONE fused op per bucket field: bucket-level updates for free.
 
 
 class RunningStats(NamedTuple):

@@ -4,6 +4,11 @@ Statistics are accumulated Adagrad-style (M += mat_i(G) mat_i(G)ᵀ, ε-init);
 inverse 4th roots are recomputed every ``interval`` steps (Fig. 6 style) and
 cached.  Grafting to the gradient magnitude follows [Anil et al. 2021] as the
 paper's §4.2 does for Eva-s.
+
+Bucketed: the M_in/M_out accumulators and cached roots live bucket-stacked;
+accumulation is one batched contraction per bucket, root recomputation one
+fused ``lax.map`` per bucket, application one batched two-sided contraction
+per bucket via ``precondition_tree``.
 """
 from __future__ import annotations
 
@@ -12,17 +17,19 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
 from repro.core.clipping import graft_to_grad_magnitude
 from repro.core.eva_s import default_precon_predicate
 from repro.core.transform import (Extras, GradientTransformation, chain,
-                                  add_decayed_weights, scale_by_schedule, trace)
+                                  add_decayed_weights, ema_trace,
+                                  scale_by_schedule)
 
 
 class ShampooState(NamedTuple):
-    m_in: dict    # (..., d_in, d_in)
-    m_out: dict   # (..., d_out, d_out)
+    m_in: dict    # {bucket: (N, ..., d_in, d_in)}
+    m_out: dict   # {bucket: (N, ..., d_out, d_out)}
     p_in: dict    # cached (M+γI)^{-1/4}
     p_out: dict
     count: jnp.ndarray
@@ -35,15 +42,15 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
     def init(params, extras: Extras | None = None):
         del extras
         flat = kvlib.flatten_params(params)
-        sel = {p: w for p, w in flat.items() if predicate(p, w)}
-        m_in = {p: eps_init * jnp.broadcast_to(
-                    jnp.eye(w.shape[-2], dtype=jnp.float32),
-                    w.shape[:-2] + (w.shape[-2], w.shape[-2]))
-                for p, w in sel.items()}
-        m_out = {p: eps_init * jnp.broadcast_to(
-                     jnp.eye(w.shape[-1], dtype=jnp.float32),
-                     w.shape[:-2] + (w.shape[-1], w.shape[-1]))
-                 for p, w in sel.items()}
+        plan = bucketing.build_plan(flat, predicate)
+        m_in, m_out = {}, {}
+        for b in plan.buckets:
+            lead = (len(b.paths),) + b.shape[:-2]
+            d_in, d_out = b.shape[-2], b.shape[-1]
+            m_in[b.key] = eps_init * jnp.broadcast_to(
+                jnp.eye(d_in, dtype=jnp.float32), lead + (d_in, d_in))
+            m_out[b.key] = eps_init * jnp.broadcast_to(
+                jnp.eye(d_out, dtype=jnp.float32), lead + (d_out, d_out))
         return ShampooState(
             m_in=m_in, m_out=m_out,
             p_in=jax.tree_util.tree_map(jnp.zeros_like, m_in),
@@ -53,26 +60,28 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
     def update(updates, state: ShampooState, params=None, extras: Extras | None = None):
         del params, extras
         flat = kvlib.flatten_params(updates)
+        plan = bucketing.build_plan(flat, predicate)
+        g_b = bucketing.gather(plan, {p: flat[p] for p in plan.paths})
         m_in, m_out = {}, {}
-        for p in state.m_in:
-            g = flat[p].astype(jnp.float32)
-            m_in[p] = state.m_in[p] + jnp.einsum('...io,...jo->...ij', g, g)
-            m_out[p] = state.m_out[p] + jnp.einsum('...io,...ij->...oj', g, g)
+        for b in plan.buckets:
+            g = g_b[b.key].astype(jnp.float32)
+            m_in[b.key] = state.m_in[b.key] + jnp.einsum('...io,...jo->...ij', g, g)
+            m_out[b.key] = state.m_out[b.key] + jnp.einsum('...io,...ij->...oj', g, g)
 
         def recompute(_):
-            return ({p: pre._inv_proot_psd(m_in[p], gamma, 0.25) for p in m_in},
-                    {p: pre._inv_proot_psd(m_out[p], gamma, 0.25) for p in m_out})
+            return ({k: pre.map_bucket(lambda m: pre._inv_proot_psd(m, gamma, 0.25),
+                                       m_in[k]) for k in m_in},
+                    {k: pre.map_bucket(lambda m: pre._inv_proot_psd(m, gamma, 0.25),
+                                       m_out[k]) for k in m_out})
 
         refresh = (state.count % interval) == 0
         p_in, p_out = jax.lax.cond(
             refresh, recompute, lambda _: (state.p_in, state.p_out), operand=None)
 
-        for p in state.m_in:
-            g = flat[p].astype(jnp.float32)
-            out = jnp.einsum('...ij,...jo->...io', p_in[p], g)
-            out = jnp.einsum('...io,...oj->...ij', out, p_out[p])
-            flat[p] = out.astype(flat[p].dtype)
-        return kvlib.unflatten_params(flat), ShampooState(
+        ops = {k: kvlib.LayerStats(a_outer=p_in[k], b_outer=p_out[k])
+               for k in p_in}
+        out = pre.precondition_tree(flat, ops, 'shampoo_cached', gamma, plan=plan)
+        return kvlib.unflatten_params(out), ShampooState(
             m_in=m_in, m_out=m_out, p_in=p_in, p_out=p_out, count=state.count + 1)
 
     return GradientTransformation(init, update)
@@ -87,7 +96,7 @@ def shampoo(lr=0.1, gamma: float = 1e-4, interval: int = 1,
     parts.append(shampoo_preconditioner(gamma, interval=interval))
     if graft:
         parts.append(graft_to_grad_magnitude())
-    parts.append(trace(momentum))
+    parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

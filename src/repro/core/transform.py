@@ -33,12 +33,17 @@ class Extras:
         (see ``repro.core.kv``); a dict keyed by parameter path.
       loss: scalar loss value for logging-style transforms.
       step: current step (filled in by ``chain``).
+      plan: optional ``repro.core.bucketing.BucketPlan`` built once at
+        ``init_opt_state`` time; bucketed preconditioners use it instead of
+        re-deriving the grouping (the fallback is a memoized re-derivation,
+        so omitting it is always correct, just redundant work at trace time).
     """
 
     raw_grads: Any = None
     stats: Any = None
     loss: Any = None
     step: Any = None
+    plan: Any = None
 
 
 class GradientTransformation(NamedTuple):
@@ -153,28 +158,55 @@ class TraceState(NamedTuple):
 
 
 def trace(momentum: float = 0.9, nesterov: bool = False,
-          dtype: Optional[jnp.dtype] = None) -> GradientTransformation:
-    """Heavy-ball momentum (torch-SGD convention: m <- mu*m + g)."""
+          dtype: Optional[jnp.dtype] = None,
+          dampening: float = 0.0,
+          bias_correction: bool = False) -> GradientTransformation:
+    """Heavy-ball momentum (torch-SGD convention: m <- mu*m + (1-dampening)·g).
+
+    ``dampening=momentum`` + ``bias_correction=True`` gives the EMA form
+    ``m̂ = (mu·m + (1-mu)·g) / (1-mu^t)``: same smoothing direction as
+    heavy-ball but unit steady-state gain instead of 1/(1-mu).  The
+    second-order optimizers use this form so that momentum composes with the
+    KL trust region — undamped heavy-ball multiplies the clipped update by
+    up to 1/(1-mu) (10× at mu=0.9), stepping far outside the region the clip
+    just enforced (the paper's §5 momentum ablation regressed without this).
+    ``momentum=0`` reduces to the identity in both conventions.
+    """
 
     def init(params):
         return TraceState(trace=jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, dtype or p.dtype), params))
 
     def update(updates, state, params=None, extras=None):
-        del params, extras
+        del params
+        gain = 1.0 - dampening
         new_trace = jax.tree_util.tree_map(
-            lambda m, g: momentum * m.astype(jnp.float32) + g.astype(jnp.float32),
+            lambda m, g: momentum * m.astype(jnp.float32)
+            + gain * g.astype(jnp.float32),
             state.trace, updates)
+        out = new_trace
+        if bias_correction and momentum:
+            step = extras.step if extras is not None and extras.step is not None \
+                else jnp.zeros((), jnp.int32)
+            corr = 1.0 - jnp.asarray(momentum, jnp.float32) \
+                ** (step.astype(jnp.float32) + 1.0)
+            out = jax.tree_util.tree_map(lambda m: m / corr, new_trace)
         if nesterov:
             out = jax.tree_util.tree_map(
-                lambda g, m: g.astype(jnp.float32) + momentum * m, updates, new_trace)
-        else:
-            out = new_trace
+                lambda g, m: gain * g.astype(jnp.float32) + momentum * m,
+                updates, out)
         stored = jax.tree_util.tree_map(
             lambda m, old: m.astype(old.dtype), new_trace, state.trace)
         return out, TraceState(trace=stored)
 
     return GradientTransformation(init, update)
+
+
+def ema_trace(momentum: float = 0.9, nesterov: bool = False) -> GradientTransformation:
+    """Bias-corrected EMA momentum — the trust-region-compatible form used by
+    the second-order optimizer chains (see ``trace``)."""
+    return trace(momentum, nesterov=nesterov, dampening=momentum,
+                 bias_correction=True)
 
 
 def scale(factor) -> GradientTransformation:

@@ -5,6 +5,16 @@ b-slices and accumulates into a (1,1) f32 VMEM scalar across the whole
 sequential grid.  Combined with ``rank1_update`` this gives the two-pass
 fused Eva step: 2 reads + 1 write of G total (vs ≥4 G-sized transfers for
 the unfused jnp composition).
+
+``bilinear_stacked`` folds a leading stack of L independent (G, a, b)
+problems into the grid as its leading axis — one kernel launch for a whole
+parameter bucket (layers of identical shape, see ``core/bucketing``).  The
+per-tile program and the (i, j) iteration order within each stack entry are
+identical to the unstacked kernel, so stacked and per-item results agree
+bit-for-bit.  The tile contraction is written as an elementwise
+multiply + reduction (not ``jnp.dot``): reduction lowering is stable across
+grid-loop contexts, where dot_general on CPU may pick different blocked
+algorithms inside vs outside a loop and break that bit-equality.
 """
 from __future__ import annotations
 
@@ -13,6 +23,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _tile_bilinear(g, a, b):
+    """Contract one (bm, bn) tile against its a/b slices -> scalar f32."""
+    return jnp.sum((a[:, None] * g) * b[None, :])
 
 
 def _bilinear_kernel(g_ref, a_ref, b_ref, o_ref):
@@ -26,7 +41,33 @@ def _bilinear_kernel(g_ref, a_ref, b_ref, o_ref):
     g = g_ref[...].astype(jnp.float32)
     a = a_ref[...].astype(jnp.float32)
     b = b_ref[...].astype(jnp.float32)
-    o_ref[0, 0] += jnp.dot(a @ g, b)
+    o_ref[0, 0] += _tile_bilinear(g, a, b)
+
+
+def _bilinear_stacked_kernel(g_ref, a_ref, b_ref, o_ref):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[0].astype(jnp.float32)
+    a = a_ref[0].astype(jnp.float32)
+    b = b_ref[0].astype(jnp.float32)
+    o_ref[0, 0, 0] += _tile_bilinear(g, a, b)
+
+
+def _pad2(g, a, b, bm, bn):
+    d_in, d_out = g.shape[-2:]
+    pad_in = (-d_in) % bm
+    pad_out = (-d_out) % bn
+    if pad_in or pad_out:
+        lead = [(0, 0)] * (g.ndim - 2)
+        g = jnp.pad(g, lead + [(0, pad_in), (0, pad_out)])
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad_in)])
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, pad_out)])
+    return g, a, b
 
 
 @functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
@@ -36,12 +77,7 @@ def bilinear(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
     """aᵀ G b -> () f32.  g: (d_in, d_out); a: (d_in,); b: (d_out,)."""
     d_in, d_out = g.shape
     bm, bn = min(block_in, d_in), min(block_out, d_out)
-    pad_in = (-d_in) % bm
-    pad_out = (-d_out) % bn
-    if pad_in or pad_out:
-        g = jnp.pad(g, ((0, pad_in), (0, pad_out)))
-        a = jnp.pad(a, (0, pad_in))
-        b = jnp.pad(b, (0, pad_out))
+    g, a, b = _pad2(g, a, b, bm, bn)
     m, n = g.shape
     out = pl.pallas_call(
         _bilinear_kernel,
@@ -56,3 +92,28 @@ def bilinear(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
         interpret=interpret,
     )(g, a.astype(jnp.float32), b.astype(jnp.float32))
     return out[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
+def bilinear_stacked(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                     block_in: int = 512, block_out: int = 512,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Stacked aᵀ G b -> (L,) f32.  g: (L, d_in, d_out); a: (L, d_in);
+    b: (L, d_out).  One launch; the stack rides the leading grid axis."""
+    L, d_in, d_out = g.shape
+    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    g, a, b = _pad2(g, a, b, bm, bn)
+    m, n = g.shape[1:]
+    out = pl.pallas_call(
+        _bilinear_stacked_kernel,
+        grid=(L, m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda l, i, j: (l, i, j)),
+            pl.BlockSpec((1, bm), lambda l, i, j: (l, i)),
+            pl.BlockSpec((1, bn), lambda l, i, j: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda l, i, j: (l, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, 1, 1), jnp.float32),
+        interpret=interpret,
+    )(g, a.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:, 0, 0]

@@ -6,7 +6,12 @@ accumulate in the f32 VMEM output block across the reduction grid axis
 (TPU grid iterations are sequential, so the j-major accumulation is safe).
 
 Tiles are 128-aligned for the 8×128 VPU; the (bm × bn) G tile multiplies a
-(bm,) a-slice and accumulates into a (bn,) output slice.
+(bm,) a-slice and accumulates into a (bn,) output slice.  The tile product
+is an elementwise multiply + axis reduction (not ``a @ g``) so the lowering
+— and therefore the accumulation order — is identical inside and outside
+grid loops; this is what lets ``matvec_stacked`` (stack folded into the
+leading grid axis, one launch per parameter bucket) match per-item calls
+bit-for-bit.
 """
 from __future__ import annotations
 
@@ -15,6 +20,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _tile_matvec(g, a):
+    """(bm, bn) tile × (bm,) slice -> (bn,) partial products, f32."""
+    return jnp.sum(a[:, None] * g, axis=0)
 
 
 def _matvec_kernel(g_ref, a_ref, o_ref):
@@ -26,7 +36,19 @@ def _matvec_kernel(g_ref, a_ref, o_ref):
 
     g = g_ref[...].astype(jnp.float32)
     a = a_ref[...].astype(jnp.float32)
-    o_ref[...] += a @ g
+    o_ref[...] += _tile_matvec(g, a)
+
+
+def _matvec_stacked_kernel(g_ref, a_ref, o_ref):
+    i = pl.program_id(2)  # reduction index (d_in blocks)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[0].astype(jnp.float32)
+    a = a_ref[0].astype(jnp.float32)
+    o_ref[0] += _tile_matvec(g, a)
 
 
 @functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
@@ -54,3 +76,30 @@ def matvec(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
         interpret=interpret,
     )(g, a.astype(jnp.float32))
     return out[:d_out] if pad_out else out
+
+
+@functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
+def matvec_stacked(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
+                   block_out: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """Stacked u = aᵀ G.  g: (L, d_in, d_out); a: (L, d_in) -> (L, d_out)
+    f32.  One launch; the stack rides the leading grid axis."""
+    L, d_in, d_out = g.shape
+    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    pad_in = (-d_in) % bm
+    pad_out = (-d_out) % bn
+    if pad_in or pad_out:
+        g = jnp.pad(g, ((0, 0), (0, pad_in), (0, pad_out)))
+        a = jnp.pad(a, ((0, 0), (0, pad_in)))
+    m, n = g.shape[1:]
+    out = pl.pallas_call(
+        _matvec_stacked_kernel,
+        grid=(L, n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda l, j, i: (l, i, j)),
+            pl.BlockSpec((1, bm), lambda l, j, i: (l, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda l, j, i: (l, j)),
+        out_shape=jax.ShapeDtypeStruct((L, n), jnp.float32),
+        interpret=interpret,
+    )(g, a.astype(jnp.float32))
+    return out[:, :d_out] if pad_out else out

@@ -4,54 +4,69 @@ On TPU these run compiled (``interpret=False``); on this CPU container the
 same kernel bodies execute under ``interpret=True`` (Python semantics) —
 identical math, validated against ``ref.py`` in tests/test_kernels.py.
 
-Leading stack dims (layers/experts) are handled by vmapping the pallas_call
-— on TPU that folds the stack into the grid.
+Leading stack dims (scan-stacked layers, experts, bucket stacks — see
+``core/bucketing``) are flattened into one leading axis and folded into the
+pallas grid via the ``*_stacked`` kernels: ONE kernel launch regardless of
+stack depth, with per-item numerics bit-identical to unstacked calls (the
+kernels iterate each item's tiles in the same order — no vmap, whose
+batched lowering changes accumulation order).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bilinear import bilinear
-from repro.kernels.matvec import matvec
-from repro.kernels.rank1_update import rank1_update
+from repro.kernels.bilinear import bilinear, bilinear_stacked
+from repro.kernels.matvec import matvec, matvec_stacked
+from repro.kernels.rank1_update import rank1_update, rank1_update_stacked
 
 # flipped to False on real TPU backends
 INTERPRET = jax.default_backend() != 'tpu'
 
 
-def _vmap_to_2d(fn, *args):
-    """Apply fn over leading stack dims (all args share them)."""
-    g = args[0]
-    if g.ndim == 2:
-        return fn(*args)
-    return jax.vmap(lambda *a: _vmap_to_2d(fn, *a))(*args)
+def _fold(x, n_lead):
+    """Collapse the leading ``n_lead`` dims into one stack axis."""
+    return x.reshape((-1,) + x.shape[n_lead:])
 
 
 def eva_precondition(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
                      gamma: float) -> jnp.ndarray:
-    """Fused Eq. 13 via bilinear + rank1_update kernels."""
+    """Fused Eq. 13 via bilinear + rank1_update kernels.
 
-    def one(g2, a1, b1):
-        dot = bilinear(g2, a1, b1, interpret=INTERPRET)
-        a32, b32 = a1.astype(jnp.float32), b1.astype(jnp.float32)
+    g: (..., d_in, d_out); a: (..., d_in); b: (..., d_out); any leading
+    stack dims run in a single grid-folded launch.
+    """
+    if g.ndim == 2:
+        dot = bilinear(g, a, b, interpret=INTERPRET)
+        a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
         denom = gamma + jnp.sum(a32 * a32) * jnp.sum(b32 * b32)
-        return rank1_update(g2, a1, b1, dot / denom, 1.0 / gamma,
+        return rank1_update(g, a, b, dot / denom, 1.0 / gamma,
                             interpret=INTERPRET)
-
-    return _vmap_to_2d(one, g, a, b)
+    lead = g.shape[:-2]
+    gs, as_, bs = _fold(g, g.ndim - 2), _fold(a, a.ndim - 1), _fold(b, b.ndim - 1)
+    dot = bilinear_stacked(gs, as_, bs, interpret=INTERPRET)          # (L,)
+    a32, b32 = as_.astype(jnp.float32), bs.astype(jnp.float32)
+    denom = gamma + jnp.sum(a32 * a32, -1) * jnp.sum(b32 * b32, -1)
+    scale = jnp.full_like(denom, 1.0 / gamma)
+    out = rank1_update_stacked(gs, as_, bs, dot / denom, scale,
+                               interpret=INTERPRET)
+    return out.reshape(lead + out.shape[1:])
 
 
 def eva_f_precondition(g: jnp.ndarray, a: jnp.ndarray, gamma: float) -> jnp.ndarray:
-    """Fused Eq. 21 via matvec + rank1_update kernels."""
-
-    def one(g2, a1):
-        u = matvec(g2, a1, interpret=INTERPRET)
-        a32 = a1.astype(jnp.float32)
+    """Fused Eq. 21 via matvec + rank1_update kernels (stack grid-folded)."""
+    if g.ndim == 2:
+        u = matvec(g, a, interpret=INTERPRET)
+        a32 = a.astype(jnp.float32)
         denom = gamma + jnp.sum(a32 * a32)
-        return rank1_update(g2, a1, u, 1.0 / denom, 1.0 / gamma,
+        return rank1_update(g, a, u, 1.0 / denom, 1.0 / gamma,
                             interpret=INTERPRET)
-
-    return _vmap_to_2d(one, g, a)
+    lead = g.shape[:-2]
+    gs, as_ = _fold(g, g.ndim - 2), _fold(a, a.ndim - 1)
+    u = matvec_stacked(gs, as_, interpret=INTERPRET)                  # (L, d_out)
+    a32 = as_.astype(jnp.float32)
+    denom = gamma + jnp.sum(a32 * a32, -1)
+    scale = jnp.full_like(denom, 1.0 / gamma)
+    out = rank1_update_stacked(gs, as_, u, 1.0 / denom, scale,
+                               interpret=INTERPRET)
+    return out.reshape(lead + out.shape[1:])

@@ -14,6 +14,9 @@ element).  The roofline goal is streaming G at HBM bandwidth, so:
 
 Grid iteration order is (d_in/bm, d_out/bn), sequential per TPU core;
 the fused multiply-sub runs on the VPU while the next G tile streams in.
+``rank1_update_stacked`` folds a leading stack of L problems into the grid
+(one launch per parameter bucket); the body is purely elementwise, so
+stacked and per-item results agree bit-for-bit.
 """
 from __future__ import annotations
 
@@ -24,13 +27,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _rank1_tile(g, a, b, coeff, scale):
+    return scale * (g - coeff * (a[:, None] * b[None, :]))
+
+
 def _rank1_kernel(g_ref, a_ref, b_ref, cs_ref, o_ref):
     g = g_ref[...].astype(jnp.float32)
     a = a_ref[...].astype(jnp.float32)
     b = b_ref[...].astype(jnp.float32)
-    coeff = cs_ref[0]
-    scale = cs_ref[1]
-    o_ref[...] = (scale * (g - coeff * (a[:, None] * b[None, :]))).astype(o_ref.dtype)
+    o_ref[...] = _rank1_tile(g, a, b, cs_ref[0], cs_ref[1]).astype(o_ref.dtype)
+
+
+def _rank1_stacked_kernel(g_ref, a_ref, b_ref, cs_ref, o_ref):
+    g = g_ref[0].astype(jnp.float32)
+    a = a_ref[0].astype(jnp.float32)
+    b = b_ref[0].astype(jnp.float32)
+    o_ref[0] = _rank1_tile(g, a, b, cs_ref[0, 0], cs_ref[0, 1]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
@@ -69,4 +81,42 @@ def rank1_update(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
     )(g, a.astype(jnp.float32), b.astype(jnp.float32), cs)
     if pad_in or pad_out:
         out = out[:d_in, :d_out]
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
+def rank1_update_stacked(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                         coeff: jnp.ndarray, scale: jnp.ndarray,
+                         block_in: int = 512, block_out: int = 512,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Stacked P = scale·(G − coeff·a bᵀ); one launch for the whole stack.
+
+    g: (L, d_in, d_out); a: (L, d_in); b: (L, d_out); coeff/scale: (L,).
+    """
+    L, d_in, d_out = g.shape
+    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    pad_in = (-d_in) % bm
+    pad_out = (-d_out) % bn
+    if pad_in or pad_out:
+        g = jnp.pad(g, ((0, 0), (0, pad_in), (0, pad_out)))
+        a = jnp.pad(a, ((0, 0), (0, pad_in)))
+        b = jnp.pad(b, ((0, 0), (0, pad_out)))
+    m, n = g.shape[1:]
+    cs = jnp.stack([jnp.asarray(coeff, jnp.float32),
+                    jnp.asarray(scale, jnp.float32)], axis=-1)   # (L, 2)
+    out = pl.pallas_call(
+        _rank1_stacked_kernel,
+        grid=(L, m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda l, i, j: (l, i, j)),
+            pl.BlockSpec((1, bm), lambda l, i, j: (l, i)),
+            pl.BlockSpec((1, bn), lambda l, i, j: (l, j)),
+            pl.BlockSpec((1, 2), lambda l, i, j: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda l, i, j: (l, i, j)),
+        out_shape=jax.ShapeDtypeStruct((L, m, n), g.dtype),
+        interpret=interpret,
+    )(g, a.astype(jnp.float32), b.astype(jnp.float32), cs)
+    if pad_in or pad_out:
+        out = out[:, :d_in, :d_out]
     return out

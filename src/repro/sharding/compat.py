@@ -1,0 +1,123 @@
+"""Version-tolerant wrappers around jax.sharding mesh APIs.
+
+The repo targets two jax generations:
+
+* **new** (>= 0.5-era): ``jax.sharding.get_abstract_mesh()`` returns the
+  mesh of the current sharding context and ``jax.sharding.AxisType``
+  distinguishes Auto/Explicit/Manual axes; ``jax.make_mesh`` accepts an
+  ``axis_types=`` keyword.
+* **old** (0.4.x, what this container ships): none of those exist.  The
+  current mesh lives at ``jax.interpreters.pxla.thread_resources.env
+  .physical_mesh`` and every axis behaves as Auto.
+
+Everything below probes the new API first and falls back, so callers never
+touch ``jax.sharding`` attributes directly.  ``tests/test_jax_compat.py``
+exercises both branches.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+# AxisType.Auto, or None when the installed jax predates axis types (in which
+# case every mesh axis is implicitly Auto).
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, 'AxisType', None), 'Auto', None)
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    """The mesh of the enclosing ``with mesh:`` context, or None.
+
+    Uses ``jax.sharding.get_abstract_mesh`` when available; otherwise reads
+    the thread-resources physical mesh (the only context mechanism on
+    jax 0.4.x).  Returns None outside any mesh context.
+    """
+    get_abstract = getattr(jax.sharding, 'get_abstract_mesh', None)
+    if get_abstract is not None:
+        m = get_abstract()
+    else:
+        m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def axes_all_auto(mesh) -> bool:
+    """True when every mesh axis is Auto (constraints are legal).
+
+    Meshes without axis-type metadata (old jax) are all-Auto by definition.
+    """
+    axis_types = getattr(mesh, 'axis_types', None)
+    if axis_types is None or AXIS_TYPE_AUTO is None:
+        return True
+    try:
+        types = tuple(axis_types)
+    except TypeError:
+        return True
+    return all(t == AXIS_TYPE_AUTO for t in types)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """``shard_map`` across jax generations: new jax exposes
+    ``jax.shard_map(..., check_vma=)``, 0.4.x has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``."""
+    sm = getattr(jax, 'shard_map', None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)
+
+
+def bound_axis_names() -> tuple[str, ...]:
+    """Mesh axis names bound in the current tracing scope (inside
+    ``shard_map``/``pmap`` bodies); () at top level.
+
+    Probes the axis env (moved between jax versions), falling back to () —
+    a false-negative only disables the optional distributed stats reduction,
+    never breaks tracing.
+    """
+    for mod in (getattr(jax, 'core', None),
+                getattr(getattr(jax, '_src', None), 'core', None)):
+        get_env = getattr(mod, 'get_axis_env', None)
+        if get_env is None:
+            continue
+        try:
+            env = get_env()
+            sizes = getattr(env, 'axis_sizes', None)
+            if sizes is not None:
+                return tuple(sizes)
+        except Exception:
+            pass
+    return ()
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized across jax versions: 0.4.x
+    returns a one-element list of per-program dicts, newer jax a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager entering ``mesh``: ``jax.set_mesh`` on new jax, the
+    mesh's own context manager (thread-resources) on 0.4.x."""
+    setter = getattr(jax, 'set_mesh', None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              **kwargs) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with all axes Auto, on any supported jax.
+
+    Old jax has no ``axis_types=`` keyword; Auto is its only behavior, so
+    dropping the argument is exact.
+    """
+    if AXIS_TYPE_AUTO is not None:
+        kwargs.setdefault('axis_types', (AXIS_TYPE_AUTO,) * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

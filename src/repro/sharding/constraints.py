@@ -17,17 +17,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding import compat
+
 
 def _current_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or m.empty:
+    m = compat.current_mesh()
+    if m is None:
         return None
-    # inside shard_map axes are Manual: constraints are illegal there
-    try:
-        if any(t != jax.sharding.AxisType.Auto for t in m.axis_types):
-            return None
-    except AttributeError:
-        pass
+    # inside shard_map axes are Manual: constraints are illegal there.  New
+    # jax marks this via axis_types; old jax has no axis metadata, so detect
+    # the shard_map body by its bound axis names instead.
+    if not compat.axes_all_auto(m):
+        return None
+    if compat.bound_axis_names():
+        return None
     return m
 
 
@@ -52,6 +55,31 @@ def constrain(x: jnp.ndarray, *axes: Optional[str]) -> jnp.ndarray:
     if all(s is None for s in spec):
         return x
     return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def data_axes_in_scope() -> tuple[str, ...]:
+    """The subset of the data-parallel axes ('pod', 'data') bound in the
+    current tracing scope (inside shard_map/pmap bodies); () elsewhere."""
+    bound = compat.bound_axis_names()
+    return tuple(a for a in ('pod', 'data') if a in bound)
+
+
+def pmean_stats(tree):
+    """psum-average a pytree of per-bucket KV/KF statistics across the live
+    data-parallel axes, making Eva's statistics batch-global as in the
+    paper's multi-GPU setup (§3.3).
+
+    No-op when no data axis is bound (single-host pjit path — there XLA's
+    sharding propagation already reduces the stats with the gradients).
+    Idempotent under repetition: pmean of already-averaged replicated values
+    returns them unchanged, so composing with an outer explicit reduction
+    (e.g. ``train/compression.py``) is safe.
+    """
+    axes = data_axes_in_scope()
+    if not axes or tree is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.pmean(x, axes if len(axes) > 1 else axes[0]), tree)
 
 
 def shard_activations(x: jnp.ndarray, seq: Optional[str] = None) -> jnp.ndarray:

@@ -22,7 +22,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import kv as kvlib
 from repro.core.transform import Extras, apply_updates
-from repro.train.step import compute_grads_and_stats
+from repro.sharding import compat
+from repro.train.step import _plan_for_stats, compute_grads_and_stats
 
 
 def quantize_allreduce(g: jnp.ndarray, err: jnp.ndarray,
@@ -70,15 +71,17 @@ def make_dp_train_step(model, opt, capture: kvlib.CaptureConfig, mesh,
         if stats is not None:
             stats = jax.tree_util.tree_map(
                 lambda s: jax.lax.pmean(s, 'data'), stats)
-        updates, new_opt = opt.update(grads, opt_state, params=params,
-                                      extras=Extras(stats=stats, loss=loss))
+        updates, new_opt = opt.update(
+            grads, opt_state, params=params,
+            extras=Extras(stats=stats, loss=loss,
+                          plan=_plan_for_stats(grads, stats)))
         new_params = apply_updates(params, updates)
         return new_params, new_opt, new_err, {'loss': loss}
 
     in_specs = (P(), P(), P(), P('data'))
     out_specs = (P(), P(), P(), P())
-    smapped = jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs, check_vma=False)
+    smapped = compat.shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check=False)
 
     def init_error(params):
         return jax.tree_util.tree_map(

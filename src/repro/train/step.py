@@ -13,8 +13,19 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core.transform import Extras, GradientTransformation, apply_updates
+
+
+def _plan_for_stats(params_or_grads, stats) -> Optional[bucketing.BucketPlan]:
+    """The bucket plan over captured (= preconditioned) paths — built once
+    here at init time and threaded to the optimizer through ``Extras.plan``
+    (re-derivations inside jitted updates hit the memo cache)."""
+    if stats is None:
+        return None
+    flat = kvlib.flatten_params(params_or_grads)
+    return bucketing.build_plan({p: flat[p] for p in stats if p in flat})
 
 
 def _default_make_taps(model, params, capture: kvlib.CaptureConfig):
@@ -110,7 +121,8 @@ def make_train_step(model, opt: GradientTransformation,
 
         updates, new_opt_state = opt.update(
             grads, opt_state, params=params,
-            extras=Extras(stats=stats, loss=loss))
+            extras=Extras(stats=stats, loss=loss,
+                          plan=_plan_for_stats(grads, stats)))
         new_params = apply_updates(params, updates)
         grad_norm = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
@@ -136,7 +148,8 @@ def init_opt_state(model, opt: GradientTransformation,
     stats_shapes = jax.eval_shape(stats_of, params, batch)
     zero_stats = jax.tree_util.tree_map(
         lambda s: jnp.zeros(s.shape, s.dtype), stats_shapes)
-    return opt.init(params, Extras(stats=zero_stats))
+    return opt.init(params, Extras(stats=zero_stats,
+                                   plan=_plan_for_stats(params, zero_stats)))
 
 
 def abstract_opt_state(model, opt: GradientTransformation,

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.sharding import compat
+
 from repro.data.memmap_loader import MemmapLM, write_tokens
 from repro.data.pipeline import Prefetcher
 from repro.data.synthetic import AEStream, ClassStream, LMStream
@@ -48,8 +50,7 @@ def test_elastic_reshard_restore(tmp_path):
     """Restore onto an explicit sharding (single-device 'mesh')."""
     t = _tree()
     ckpt.save(tmp_path, 1, t)
-    mesh = jax.make_mesh((1,), ('data',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ('data',))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     restored, _ = ckpt.restore(tmp_path, 1,
                                jax.tree_util.tree_map(jnp.zeros_like, t),

@@ -4,9 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import precondition as pre
+hypothesis = pytest.importorskip('hypothesis')
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import precondition as pre  # noqa: E402
 
 
 @pytest.fixture(autouse=True, scope='module')

@@ -5,11 +5,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import kv as kvlib
-from repro.core.clipping import kl_clip
-from repro.core.transform import Extras
+hypothesis = pytest.importorskip('hypothesis')
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import kv as kvlib  # noqa: E402
+from repro.core.clipping import kl_clip  # noqa: E402
+from repro.core.transform import Extras  # noqa: E402
 
 seeds = st.integers(min_value=0, max_value=2 ** 16)
 
@@ -95,8 +97,8 @@ def test_sharding_resolver_always_valid(seed, dims):
     from repro.sharding.logical import RULES, resolve_pspec
     if jax.device_count() < 1:
         pytest.skip('no devices')
-    mesh = jax.make_mesh((1, 1), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding import compat
+    mesh = compat.make_mesh((1, 1), ('data', 'model'))
     axes_pool = list(RULES.keys())
     rng = np.random.default_rng(seed)
     axes = tuple(axes_pool[rng.integers(len(axes_pool))] for _ in dims)
