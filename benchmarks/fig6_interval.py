@@ -1,8 +1,13 @@
-"""Paper Fig. 6: K-FAC second-order update interval study.
+"""Paper Fig. 6, generalized by the refresh runtime: every method × policy.
 
-K-FAC@{1,5,20} on the MLP task: per-step time falls with the interval but
-staleness costs loss; Eva@1 needs no interval at all — the paper's core
-systems argument."""
+The original figure studies K-FAC@{1,5,20} — per-step time falls with the
+update interval but staleness costs loss, while Eva@1 needs no interval at
+all.  With the curvature refresh runtime (``repro.schedule``) the interval
+is a *policy*, and every method takes the same knob, so the grid is now
+method × {every_k(1), every_k(5), every_k(20), adaptive} with the realized
+per-policy refresh count, the staleness proxy, per-step time and final
+loss in every cell.
+"""
 from __future__ import annotations
 
 import jax
@@ -12,19 +17,30 @@ from repro.core.registry import make_optimizer
 from repro.data.synthetic import ClassStream
 from repro.models import module as M
 from repro.models.simple import MLP, classifier_loss_fn
+from repro.schedule import runtime as schedrt
+from repro.schedule.policy import adaptive, every_k
 from repro.train.step import init_opt_state, make_train_step
 
 STEPS = 40
+
+METHODS = ['eva', 'eva_f', 'eva_s', 'foof', 'kfac', 'shampoo']
+
+POLICIES = [
+    ('every1', lambda: every_k(1)),
+    ('every5', lambda: every_k(5)),
+    ('every20', lambda: every_k(20)),
+    ('adaptive', lambda: adaptive(threshold=0.05, max_interval=50)),
+]
 
 
 def run() -> None:
     stream = ClassStream(batch=128, dim=64, classes=10, spread=1.2)
 
-    def train(name, **kw):
+    def train(name, policy):
         model = MLP([64, 256, 256, 10])
         model.loss_fn = classifier_loss_fn(model)
         params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
-        opt, capture = make_optimizer(name, lr=0.05, **kw)
+        opt, capture = make_optimizer(name, lr=0.05, policy=policy)
         taps_fn = (lambda p: model.make_taps(128, capture)) \
             if capture.needs_taps else None
         state = init_opt_state(model, opt, capture, params, stream.batch_at(0),
@@ -33,11 +49,18 @@ def run() -> None:
         t = time_fn(step, params, state, stream.batch_at(0))
         for i in range(STEPS):
             params, state, m = step(params, state, stream.batch_at(i))
-        return t, float(m['loss'])
+        sched = schedrt.schedule_metrics(state)
+        return (t, float(m['loss']), int(sched['refreshes']),
+                float(sched['staleness']))
 
-    for label, name, kw in [('kfac@1', 'kfac', {'interval': 1}),
-                            ('kfac@5', 'kfac', {'interval': 5}),
-                            ('kfac@20', 'kfac', {'interval': 20}),
-                            ('eva@1', 'eva', {})]:
-        t, loss = train(name, **kw)
-        emit(f'fig6/{label}', t, f'loss_at_{STEPS}={loss:.4f}')
+    for name in METHODS:
+        for plabel, make_policy in POLICIES:
+            t, loss, refreshes, staleness = train(name, make_policy())
+            emit(f'fig6/{name}@{plabel}', t,
+                 f'loss_at_{STEPS}={loss:.4f};refreshes={refreshes}/{STEPS};'
+                 f'staleness={staleness:.3g}')
+
+
+if __name__ == '__main__':
+    print('name,us_per_call,derived')
+    run()

@@ -48,11 +48,16 @@ def run_bucketed() -> None:
 
     def per_path_eva_preconditioner(gamma=0.03, kv_decay=0.95):
         """The pre-bucketing per-path dict loop, kept as the baseline."""
+        from typing import NamedTuple
+
         fields = ('a_mean', 'b_mean')
 
+        class PerPathState(NamedTuple):
+            running: kvlib.RunningStats
+
         def init(params, extras=None):
-            from repro.core.eva import _zeros_like_spec, EvaState
-            return EvaState(running=kvlib.init_running(
+            from repro.core.eva import _zeros_like_spec
+            return PerPathState(running=kvlib.init_running(
                 _zeros_like_spec(_extract(extras.stats, fields))))
 
         def update(updates, state, params=None, extras=None):
@@ -62,8 +67,7 @@ def run_bucketed() -> None:
             for path, st in stats.items():
                 flat[path] = pre.eva_precondition(
                     flat[path], st.a_mean, st.b_mean, gamma)
-            from repro.core.eva import EvaState
-            return kvlib.unflatten_params(flat), EvaState(running=running)
+            return kvlib.unflatten_params(flat), PerPathState(running=running)
 
         return GradientTransformation(init, update)
 

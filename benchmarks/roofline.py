@@ -4,6 +4,13 @@ Per (arch × shape × mesh): the three roofline terms, the dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPs, memory/device — plus a one-line
 suggestion for moving the dominant term (heuristic from the breakdown).
 Writes results/roofline.md and prints CSV rows.
+
+Also emits the §3.3 sublinear-communication table: per-step curvature
+(KV/KF) all-reduce volume vs the gradient all-reduce volume, analytically
+from the model's parameter/precon-path specs — Eva's KV vectors are O(d)
+per layer against the O(d²) gradients (the paper's claim), K-FAC's factors
+are O(d²) (same order as gradients), and the refresh runtime's ownership
+exchange adds the cached-inverse volume amortized by the refresh interval.
 """
 from __future__ import annotations
 
@@ -13,6 +20,9 @@ from pathlib import Path
 from benchmarks.common import emit
 
 DRYRUN_DIR = Path('results/dryrun')
+
+KVCOMM_ARCHES = ['qwen2-0.5b', 'glm4-9b']
+OWNERSHIP_INTERVAL = 10  # refresh interval amortizing the exchange volume
 
 
 def _suggest(rec: dict) -> str:
@@ -35,6 +45,55 @@ def load_records() -> list[dict]:
     for p in sorted(DRYRUN_DIR.glob('*.json')):
         recs.append(json.loads(p.read_text()))
     return recs
+
+
+def kv_comm_rows() -> list[str]:
+    """§3.3 per-step all-reduce volumes (bytes, f32) for each arch:
+    gradients vs Eva KVs vs K-FAC factors vs the ownership exchange."""
+    from repro.configs.registry import get_config
+    from repro.models import build_model
+    from repro.models import module as M
+
+    lines = ['',
+             '## KV vs gradient all-reduce volume per step (§3.3)',
+             '',
+             '| arch | grad MB | eva_kv MB | kv/grad | kfac_kf MB | kf/grad '
+             f'| ownership_exchange MB (@k={OWNERSHIP_INTERVAL}) |',
+             '|---|---|---|---|---|---|---|']
+    for arch in KVCOMM_ARCHES:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        specs = M.flatten_specs(model.param_specs())
+        precon = sorted(set(model.precon_paths()) & set(specs))
+        n_params = sum(int(_prod(s.shape)) for s in specs.values())
+        grad_b = 4 * n_params
+        kv_b = kf_b = 0
+        for p in precon:
+            shape = specs[p].shape
+            lead = _prod(shape[:-2])
+            d_in, d_out = shape[-2], shape[-1]
+            kv_b += 4 * lead * (d_in + d_out)          # ā, b̄ vectors
+            kf_b += 4 * lead * (d_in ** 2 + d_out ** 2)  # AAᵀ, BBᵀ factors
+        # the worker-sharded refresh exchanges the cached inverses (same
+        # volume as the factors) once per refresh — amortize by the interval
+        own_b = kf_b / OWNERSHIP_INTERVAL
+        mb = 1 / 2 ** 20
+        lines.append(
+            f'| {arch} | {grad_b * mb:.1f} | {kv_b * mb:.3f} '
+            f'| {kv_b / grad_b:.2e} | {kf_b * mb:.1f} | {kf_b / grad_b:.2f} '
+            f'| {own_b * mb:.1f} |')
+        emit(f'roofline/kvcomm/{arch}', 0.0,
+             f'kv_over_grad={kv_b / grad_b:.2e};kf_over_grad='
+             f'{kf_b / grad_b:.2f};grad_mb={grad_b * mb:.1f};'
+             f'ownership_mb_per_step={own_b * mb:.2f}')
+    return lines
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
 
 
 def run() -> None:
@@ -61,6 +120,7 @@ def run() -> None:
         emit(f'roofline/{tag}', dom_val * 1e6,
              f"dominant={rec['dominant']};useful_ratio="
              f"{rec['useful_flop_ratio']:.2f};mem_gib={mem_gib:.1f}")
+    lines += kv_comm_rows()
     out = Path('results/roofline.md')
     out.parent.mkdir(exist_ok=True)
     out.write_text('\n'.join(lines) + '\n')

@@ -14,8 +14,23 @@ per layer per projection — what a hook-based implementation pays) vs
 per-PATH loop (broadcast over the scan stack, the pre-bucketing repo
 state) vs the bucketed ``precondition_tree`` (one call per (shape, dtype)
 bucket), with the launch counts that explain the gap.
+
+``--refresh-sharding`` isolates the curvature *refresh* stage (K-FAC damped
+inverses for the same 24-layer config) under a W=4 host-device data mesh:
+every-worker-redundant recomputation (the pre-runtime behavior) vs
+worker-sharded ownership + psum exchange (``repro.schedule``) — the
+1/W-inverse-FLOPs cell.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+if '--refresh-sharding' in sys.argv:  # must precede the first jax import
+    _flags = os.environ.get('XLA_FLAGS', '')
+    if '--xla_force_host_platform_device_count' not in _flags:
+        os.environ['XLA_FLAGS'] = (
+            _flags + ' --xla_force_host_platform_device_count=4').strip()
 
 import argparse
 
@@ -93,20 +108,106 @@ def run_bucketed(method: str = 'eva') -> None:
         return {p: pre.eva_precondition(g[p], a[p].a_mean, a[p].b_mean, 0.03)
                 for p in paths}
 
-    def bucketed(g, a):
-        return pre.precondition_tree(g, a, method, 0.03, plan=plan)
+    def bucketed(p):
+        return lambda g, a: pre.precondition_tree(g, a, method, 0.03, plan=p)
 
+    def launches(p):
+        return sum(1 if b.stacked else len(b.paths) for b in p.buckets)
+
+    # pure bucketing (every bucket stacked) vs the tuned plan (default
+    # min_bucket_size: N<=2 buckets skip gather/scatter — the ROADMAP
+    # "bucket gather cost" item; at this config every bucket is small, so
+    # the tuned plan degenerates to per-path, which is the point on CPU)
+    plan_pure = bucketing.build_plan(grads, min_bucket_size=1)
     t_layer = time_fn(jax.jit(per_layer), grads, aux)
     t_path = time_fn(jax.jit(per_path), grads, aux)
-    t_bucket = time_fn(jax.jit(bucketed), grads, aux)
+    t_pure = time_fn(jax.jit(bucketed(plan_pure)), grads, aux)
+    t_tuned = time_fn(jax.jit(bucketed(plan)), grads, aux)
     emit(f'table5/precon/{cfg.name}/per_layer', t_layer,
          f'launches={n_layers}')
     emit(f'table5/precon/{cfg.name}/per_path', t_path,
          f'launches={len(paths)}')
-    emit(f'table5/precon/{cfg.name}/bucketed', t_bucket,
-         f'launches={len(plan.buckets)};speedup_vs_per_layer='
-         f'{t_layer / max(t_bucket, 1e-9):.2f}x;'
-         f'speedup_vs_per_path={t_path / max(t_bucket, 1e-9):.2f}x')
+    emit(f'table5/precon/{cfg.name}/bucketed', t_pure,
+         f'launches={launches(plan_pure)};speedup_vs_per_layer='
+         f'{t_layer / max(t_pure, 1e-9):.2f}x;'
+         f'speedup_vs_per_path={t_path / max(t_pure, 1e-9):.2f}x')
+    emit(f'table5/precon/{cfg.name}/bucketed_tuned', t_tuned,
+         f'launches={launches(plan)};min_bucket_size=default;'
+         f'speedup_vs_per_layer={t_layer / max(t_tuned, 1e-9):.2f}x;'
+         f'speedup_vs_bucketed={t_pure / max(t_tuned, 1e-9):.2f}x')
+
+
+def run_refresh_sharding() -> None:
+    """K-FAC inverse refresh for the 24-layer bench config on a (4,)-'data'
+    host mesh: redundant (every worker inverts every bucket item) vs
+    worker-sharded (each worker inverts only its owned slices, psum
+    exchange).  Wall time includes the exchange, so the printed speedup is
+    the end-to-end refresh win, not just the FLOP ratio."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.precondition import kfac_pi_damping
+    from repro.schedule import ownership
+    from repro.schedule import runtime as schedrt
+    from repro.sharding import compat
+
+    cfg = _bench_config()
+    model = build_model(cfg)
+    flat_specs = M.flatten_specs(model.param_specs())
+    paths = sorted(set(model.precon_paths()) & set(flat_specs))
+    key = jax.random.PRNGKey(0)
+    grads = {p: jax.random.normal(jax.random.fold_in(key, i),
+                                  flat_specs[p].shape, jnp.float32)
+             for i, p in enumerate(paths)}
+    plan = bucketing.build_plan(grads)
+
+    def psd(k, *shape):
+        m = jax.random.normal(k, shape)
+        return m @ jnp.swapaxes(m, -1, -2) + 0.1 * jnp.eye(shape[-1])
+
+    stats, old = {}, {}
+    for i, b in enumerate(plan.buckets):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, 1000 + i))
+        lead = (len(b.paths),) + b.shape[:-2]
+        d_in, d_out = b.shape[-2], b.shape[-1]
+        ao = psd(k1, *lead, d_in, d_in)
+        bo = psd(k2, *lead, d_out, d_out)
+        stats[b.key] = (ao, bo)
+        old[b.key] = (jnp.zeros_like(ao), jnp.zeros_like(bo))
+
+    def one(b, args):
+        ao, bo = args
+        gamma_r, gamma_q = kfac_pi_damping(ao, bo, 0.03)
+        eye_a = jnp.eye(ao.shape[-1], dtype=jnp.float32)
+        eye_b = jnp.eye(bo.shape[-1], dtype=jnp.float32)
+        return (jnp.linalg.inv(ao + gamma_r[..., None, None] * eye_a),
+                jnp.linalg.inv(bo + gamma_q[..., None, None] * eye_b))
+
+    n_items = sum(len(b.paths) for b in plan.buckets)
+    if jax.device_count() < 2:
+        raise SystemExit('refresh-sharding cell needs multiple host devices '
+                         f'(got {jax.device_count()}; check XLA_FLAGS)')
+    mesh = compat.make_mesh((jax.device_count(),), ('data',))
+
+    def refresh(shard):
+        def body(s, o):
+            return schedrt.sharded_refresh(
+                plan, jnp.asarray(True), one, s, o,
+                cost=ownership.inverse_cost('both'), shard=shard)
+        return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                                        out_specs=P(), check=False))
+
+    t_red = time_fn(refresh(False), stats, old)
+    t_shard = time_fn(refresh(True), stats, old)
+    world = jax.device_count()
+    emit(f'table5/refresh/{cfg.name}/redundant_w{world}', t_red,
+         f'items_per_worker={n_items}')
+    per_worker = {w: 0 for w in range(world)}
+    for owns in ownership.describe_ownership(plan, world).values():
+        for w in owns:
+            per_worker[w] += 1
+    emit(f'table5/refresh/{cfg.name}/sharded_w{world}', t_shard,
+         f'items_per_worker={max(per_worker.values())};'
+         f'speedup={t_red / max(t_shard, 1e-9):.2f}x')
 
 
 def run() -> None:
@@ -149,10 +250,15 @@ def main() -> None:
     ap.add_argument('--bucketed', action='store_true',
                     help='only the bucketed-vs-per-layer preconditioning '
                          'comparison (24-layer qwen2-0.5b-proportioned)')
+    ap.add_argument('--refresh-sharding', action='store_true',
+                    help='only the worker-sharded curvature-refresh cell '
+                         '(4 host devices, K-FAC inverses)')
     args = ap.parse_args()
     print('name,us_per_call,derived')
     if args.bucketed:
         run_bucketed()
+    elif args.refresh_sharding:
+        run_refresh_sharding()
     else:
         run()
 

@@ -34,11 +34,23 @@ import jax
 import jax.numpy as jnp
 
 
+# Buckets with fewer than this many members skip the stack/unstack copies in
+# ``precondition.precondition_tree`` and take the broadcast per-path calls
+# instead: the table5 CPU numbers showed gather/scatter copies for N<=2
+# buckets costing more than the one launch they save (ROADMAP "bucket gather
+# cost").  State layout is unaffected — optimizer state stays bucket-stacked
+# for every bucket (``gather_tree``/``gather`` ignore the flag), so the
+# threshold is purely an execution-path choice and outputs stay bit-identical
+# either way (proven in tests/test_bucketing.py).
+DEFAULT_MIN_BUCKET_SIZE = 3
+
+
 class Bucket(NamedTuple):
     key: str                    # "<dtype>_<d0>x<d1>..."
     paths: tuple[str, ...]      # sorted; index in this tuple == stack index
     shape: tuple[int, ...]      # per-leaf shape (without the stack axis)
     dtype: Any                  # jnp dtype
+    stacked: bool = True        # False: small bucket, broadcast path
 
 
 class BucketPlan(NamedTuple):
@@ -57,7 +69,7 @@ def bucket_key(shape: tuple[int, ...], dtype) -> str:
 
 
 @functools.lru_cache(maxsize=512)
-def _plan_from_sig(sig: tuple) -> BucketPlan:
+def _plan_from_sig(sig: tuple, min_bucket_size: int) -> BucketPlan:
     groups: dict[str, list] = {}
     meta: dict[str, tuple] = {}
     for path, shape, dtype_name in sig:
@@ -66,20 +78,27 @@ def _plan_from_sig(sig: tuple) -> BucketPlan:
         meta[key] = (shape, dtype_name)
     buckets = tuple(
         Bucket(key=k, paths=tuple(sorted(groups[k])),
-               shape=meta[k][0], dtype=jnp.dtype(meta[k][1]))
+               shape=meta[k][0], dtype=jnp.dtype(meta[k][1]),
+               stacked=len(groups[k]) >= min_bucket_size)
         for k in sorted(groups))
     return BucketPlan(buckets=buckets)
 
 
 def build_plan(flat: Mapping[str, Any],
-               predicate: Optional[Callable[[str, Any], bool]] = None) -> BucketPlan:
+               predicate: Optional[Callable[[str, Any], bool]] = None,
+               min_bucket_size: Optional[int] = None) -> BucketPlan:
     """Group ``{path: leaf}`` (arrays / ShapeDtypeStructs / tracers) into a
-    deterministic BucketPlan; ``predicate(path, leaf)`` filters paths."""
+    deterministic BucketPlan; ``predicate(path, leaf)`` filters paths.
+    Buckets smaller than ``min_bucket_size`` (default
+    ``DEFAULT_MIN_BUCKET_SIZE``) are marked unstacked — same grouping and
+    state layout, but ``precondition_tree`` skips their gather/scatter."""
+    if min_bucket_size is None:
+        min_bucket_size = DEFAULT_MIN_BUCKET_SIZE
     sig = tuple(sorted(
         (p, tuple(x.shape), jnp.dtype(x.dtype).name)
         for p, x in flat.items()
         if predicate is None or predicate(p, x)))
-    return _plan_from_sig(sig)
+    return _plan_from_sig(sig, min_bucket_size)
 
 
 def gather(plan: BucketPlan, flat: Mapping[str, Any]) -> dict[str, jnp.ndarray]:
@@ -108,12 +127,6 @@ def gather_tree(plan: BucketPlan, flat: Mapping[str, Any]) -> dict[str, Any]:
         trees = [flat[p] for p in b.paths]
         out[b.key] = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *trees)
     return out
-
-
-def map_buckets(fn: Callable[[Bucket, Any], Any],
-                plan: BucketPlan, bucketed: Mapping[str, Any]) -> dict[str, Any]:
-    """Apply ``fn(bucket, value)`` to each bucket's stacked value."""
-    return {b.key: fn(b, bucketed[b.key]) for b in plan.buckets}
 
 
 def is_bucketed(plan: BucketPlan, mapping: Mapping[str, Any]) -> bool:

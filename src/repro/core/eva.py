@@ -14,7 +14,7 @@ the paper's multi-GPU setup.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,11 +26,14 @@ from repro.core.clipping import kl_clip_trace
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
+from repro.schedule import policy as schedpol, runtime as schedrt
 from repro.sharding.constraints import pmean_stats
 
 
 class EvaState(NamedTuple):
     running: kvlib.RunningStats
+    cached: Any                   # KV snapshot applied at the last refresh
+    sched: schedpol.SchedState
 
 
 def _zeros_like_spec(tree):
@@ -57,9 +60,43 @@ def _stats_plan(flat_updates: dict, stats: dict,
                                  if p in flat_updates})
 
 
+def _eva_cached_init(pol, zeros):
+    """The eva-family applied-snapshot slot: None when the policy itself
+    keeps a snapshot (adaptive) — both follow the identical
+    where(refresh, fresh, old) update from identical zeros, so storing the
+    tree twice would double the KV bytes in state and every checkpoint."""
+    return None if pol.wants_snapshot else zeros
+
+
+def _refresh_snapshot(pol, sched, stats, cached):
+    """Shared eva-family refresh: the KV snapshot actually *applied* is the
+    bias-corrected EMA at the last refresh.  With ``every_k(1)`` the
+    ``jnp.where`` selects the fresh stats every step — bit-identical to the
+    historical always-fresh behavior (the select copies values exactly).
+    The EMA itself still advances every step, mirroring how K-FAC refreshes
+    factors every step but inverses on the interval.
+
+    Returns ``(applied stats, new SchedState, new cached slot)``; snapshot
+    policies read/maintain the applied tree inside SchedState instead of a
+    duplicate ``cached`` (see ``_eva_cached_init``)."""
+    refresh, staleness = pol.decide(sched, stats)
+    base = sched.snapshot if pol.wants_snapshot else cached
+    used = jax.tree_util.tree_map(
+        lambda f, c: jnp.where(refresh, f, c), stats, base)
+    new_sched = schedpol.commit(pol, sched, stats, refresh, staleness)
+    return used, new_sched, (None if pol.wants_snapshot else used)
+
+
 def eva_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
-                       use_pallas: bool = False) -> GradientTransformation:
-    """Bucketed P = (G − (b̄ᵀGā)/(γ+‖ā‖²‖b̄‖²)·āb̄ᵀ)/γ with EMA'd KVs."""
+                       use_pallas: bool = False, interval: int = 1,
+                       policy: Optional[schedpol.RefreshPolicy] = None
+                       ) -> GradientTransformation:
+    """Bucketed P = (G − (b̄ᵀGā)/(γ+‖ā‖²‖b̄‖²)·āb̄ᵀ)/γ with EMA'd KVs.
+
+    Eva is cheap enough to refresh every step (the paper's argument), but
+    the refresh runtime gives it the same policy knob as the baselines —
+    the Fig. 6 grid needs eva × {every_k, adaptive} cells too.
+    """
 
     fields = ('a_mean', 'b_mean')
 
@@ -69,20 +106,27 @@ def eva_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
                              '(pass Extras(stats=...) — see train.make_train_step)')
         flat = kvlib.flatten_params(params)
         plan = _stats_plan(flat, extras.stats, extras)
-        zeros = _zeros_like_spec(_extract(extras.stats, fields))
-        return EvaState(running=kvlib.init_running(
-            bucketing.gather_tree(plan, zeros)))
+        zeros = bucketing.gather_tree(
+            plan, _zeros_like_spec(_extract(extras.stats, fields)))
+        pol = schedrt.from_extras(extras).resolve(policy, interval)
+        return EvaState(running=kvlib.init_running(zeros),
+                        cached=_eva_cached_init(pol, zeros),
+                        sched=schedpol.init_state(pol, zeros))
 
     def update(updates, state: EvaState, params=None, extras: Extras | None = None):
         del params
+        pol = schedrt.from_extras(extras).resolve(policy, interval)
         flat = kvlib.flatten_params(updates)
         fresh_flat = _extract(extras.stats, fields)
         plan = _stats_plan(flat, fresh_flat, extras)
         fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
         stats, running = kvlib.update_running(state.running, fresh, kv_decay)
-        out = pre.precondition_tree(flat, stats, 'eva', gamma, plan=plan,
+        used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
+                                                state.cached)
+        out = pre.precondition_tree(flat, used, 'eva', gamma, plan=plan,
                                     use_pallas=use_pallas)
-        return kvlib.unflatten_params(out), EvaState(running=running)
+        return kvlib.unflatten_params(out), EvaState(
+            running=running, cached=cached, sched=sched)
 
     return GradientTransformation(init, update)
 
@@ -90,14 +134,16 @@ def eva_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
 def eva(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
         kl_kappa: float = 1e-3, momentum: float = 0.9,
         weight_decay: float = 0.0, nesterov: bool = False,
-        use_pallas: bool = False) -> GradientTransformation:
+        use_pallas: bool = False, interval: int = 1,
+        policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
     """The full Eva optimizer as evaluated in the paper (§5)."""
     parts = []
     if weight_decay:
         # L2 regularization enters the gradient *before* preconditioning,
         # matching the reference implementation (grad += wd * w pre-hook).
         parts.append(add_decayed_weights(weight_decay))
-    parts.append(eva_preconditioner(gamma, kv_decay, use_pallas=use_pallas))
+    parts.append(eva_preconditioner(gamma, kv_decay, use_pallas=use_pallas,
+                                    interval=interval, policy=policy))
     if kl_kappa is not None:
         # momentum lives INSIDE the trust region (see clipping.kl_clip_trace)
         parts.append(kl_clip_trace(kl_kappa, lr, momentum, nesterov=nesterov))

@@ -2,28 +2,35 @@
 preconditioning + hyper-parameter-free KL normalization.
 
 Bucketed like ``eva``: one ``precondition_tree`` call per (shape, dtype)
-bucket, bucket-level KV EMA, distributed psum hook."""
+bucket, bucket-level KV EMA, distributed psum hook.  KV-snapshot refresh is
+scheduled through ``repro.schedule`` (same knob as the baselines)."""
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
 
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
 from repro.core.clipping import kl_normalize
-from repro.core.eva import _extract, _stats_plan, _zeros_like_spec
+from repro.core.eva import (_eva_cached_init, _extract, _refresh_snapshot,
+                            _stats_plan, _zeros_like_spec)
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
+from repro.schedule import policy as schedpol, runtime as schedrt
 from repro.sharding.constraints import pmean_stats
 
 
 class EvaFState(NamedTuple):
     running: kvlib.RunningStats
+    cached: Any
+    sched: schedpol.SchedState
 
 
 def eva_f_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
-                         use_pallas: bool = False) -> GradientTransformation:
+                         use_pallas: bool = False, interval: int = 1,
+                         policy: Optional[schedpol.RefreshPolicy] = None
+                         ) -> GradientTransformation:
     fields = ('a_mean',)
 
     def init(params, extras: Extras | None = None):
@@ -31,31 +38,40 @@ def eva_f_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
             raise ValueError('eva_f_preconditioner.init needs example stats')
         flat = kvlib.flatten_params(params)
         plan = _stats_plan(flat, extras.stats, extras)
-        zeros = _zeros_like_spec(_extract(extras.stats, fields))
-        return EvaFState(running=kvlib.init_running(
-            bucketing.gather_tree(plan, zeros)))
+        zeros = bucketing.gather_tree(
+            plan, _zeros_like_spec(_extract(extras.stats, fields)))
+        pol = schedrt.from_extras(extras).resolve(policy, interval)
+        return EvaFState(running=kvlib.init_running(zeros),
+                         cached=_eva_cached_init(pol, zeros),
+                         sched=schedpol.init_state(pol, zeros))
 
     def update(updates, state: EvaFState, params=None, extras: Extras | None = None):
         del params
+        pol = schedrt.from_extras(extras).resolve(policy, interval)
         flat = kvlib.flatten_params(updates)
         fresh_flat = _extract(extras.stats, fields)
         plan = _stats_plan(flat, fresh_flat, extras)
         fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
         stats, running = kvlib.update_running(state.running, fresh, kv_decay)
-        out = pre.precondition_tree(flat, stats, 'eva_f', gamma, plan=plan,
+        used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
+                                                state.cached)
+        out = pre.precondition_tree(flat, used, 'eva_f', gamma, plan=plan,
                                     use_pallas=use_pallas)
-        return kvlib.unflatten_params(out), EvaFState(running=running)
+        return kvlib.unflatten_params(out), EvaFState(
+            running=running, cached=cached, sched=sched)
 
     return GradientTransformation(init, update)
 
 
 def eva_f(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
           momentum: float = 0.9, weight_decay: float = 0.0,
-          use_pallas: bool = False) -> GradientTransformation:
+          use_pallas: bool = False, interval: int = 1,
+          policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
-    parts.append(eva_f_preconditioner(gamma, kv_decay, use_pallas=use_pallas))
+    parts.append(eva_f_preconditioner(gamma, kv_decay, use_pallas=use_pallas,
+                                      interval=interval, policy=policy))
     parts.append(kl_normalize())
     parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))

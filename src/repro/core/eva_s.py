@@ -12,7 +12,7 @@ update run once per (shape, dtype) bucket via ``precondition_tree``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,9 +21,11 @@ from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
 from repro.core.clipping import graft_to_grad_magnitude
+from repro.core.eva import _eva_cached_init, _refresh_snapshot
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
+from repro.schedule import policy as schedpol, runtime as schedrt
 
 
 def default_precon_predicate(path: str, leaf) -> bool:
@@ -33,14 +35,16 @@ def default_precon_predicate(path: str, leaf) -> bool:
 
 class EvaSState(NamedTuple):
     running: kvlib.RunningStats
+    cached: Any
+    sched: schedpol.SchedState
 
 
 def eva_s_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
-                         use_pallas: bool = False,
+                         use_pallas: bool = False, interval: int = 1,
+                         policy: Optional[schedpol.RefreshPolicy] = None,
                          predicate=default_precon_predicate) -> GradientTransformation:
 
     def init(params, extras: Extras | None = None):
-        del extras
         flat = kvlib.flatten_params(params)
         plan = bucketing.build_plan(flat, predicate)
         zeros = {
@@ -49,10 +53,14 @@ def eva_s_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
                 b_mean=jnp.zeros((len(b.paths),) + b.shape[:-2] + b.shape[-1:],
                                  jnp.float32))
             for b in plan.buckets}
-        return EvaSState(running=kvlib.init_running(zeros))
+        pol = schedrt.from_extras(extras).resolve(policy, interval)
+        return EvaSState(running=kvlib.init_running(zeros),
+                         cached=_eva_cached_init(pol, zeros),
+                         sched=schedpol.init_state(pol, zeros))
 
     def update(updates, state: EvaSState, params=None, extras: Extras | None = None):
-        del params, extras
+        del params
+        pol = schedrt.from_extras(extras).resolve(policy, interval)
         flat = kvlib.flatten_params(updates)
         plan = bucketing.build_plan(flat, predicate)
         g_b = bucketing.gather(plan, {p: flat[p] for p in plan.paths})
@@ -61,20 +69,25 @@ def eva_s_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
             vi, vo = pre.grad_kvs(g_b[b.key])
             fresh[b.key] = kvlib.LayerStats(a_mean=vi, b_mean=vo)
         stats, running = kvlib.update_running(state.running, fresh, kv_decay)
-        out = pre.precondition_tree(flat, stats, 'eva_s', gamma, plan=plan,
+        used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
+                                                state.cached)
+        out = pre.precondition_tree(flat, used, 'eva_s', gamma, plan=plan,
                                     use_pallas=use_pallas)
-        return kvlib.unflatten_params(out), EvaSState(running=running)
+        return kvlib.unflatten_params(out), EvaSState(
+            running=running, cached=cached, sched=sched)
 
     return GradientTransformation(init, update)
 
 
 def eva_s(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
           momentum: float = 0.9, weight_decay: float = 0.0,
-          use_pallas: bool = False) -> GradientTransformation:
+          use_pallas: bool = False, interval: int = 1,
+          policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
-    parts.append(eva_s_preconditioner(gamma, kv_decay, use_pallas=use_pallas))
+    parts.append(eva_s_preconditioner(gamma, kv_decay, use_pallas=use_pallas,
+                                      interval=interval, policy=policy))
     parts.append(graft_to_grad_magnitude())
     parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))

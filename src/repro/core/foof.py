@@ -2,11 +2,13 @@
 
 Bucketed: the AAᵀ EMA and the cached damped inverses live bucket-stacked;
 recomputation is one fused ``lax.map`` per bucket and application one
-batched contraction per bucket via ``precondition_tree``.
+batched contraction per bucket via ``precondition_tree``.  Inverse refresh
+is scheduled/worker-sharded through ``repro.schedule`` (input factor only,
+so ownership weighting uses the 'left' cost model).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,17 +22,20 @@ from repro.core.kfac import _damped_inv
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
+from repro.schedule import ownership, policy as schedpol, runtime as schedrt
 from repro.sharding.constraints import pmean_stats
 
 
 class FoofState(NamedTuple):
     running: kvlib.RunningStats
     a_inv: dict
-    count: jnp.ndarray
+    sched: schedpol.SchedState
 
 
 def foof_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
-                        interval: int = 1) -> GradientTransformation:
+                        interval: int = 1,
+                        policy: Optional[schedpol.RefreshPolicy] = None
+                        ) -> GradientTransformation:
     fields = ('a_outer',)
 
     def init(params, extras: Extras | None = None):
@@ -42,39 +47,43 @@ def foof_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
             plan, _zeros_like_spec(_extract(extras.stats, fields)))
         run = kvlib.init_running(zeros)
         a_inv = {k: jnp.zeros_like(st.a_outer) for k, st in run.stats.items()}
-        return FoofState(running=run, a_inv=a_inv, count=jnp.zeros((), jnp.int32))
+        pol = schedrt.from_extras(extras).resolve(policy, interval)
+        return FoofState(running=run, a_inv=a_inv,
+                         sched=schedpol.init_state(pol, run.stats))
 
     def update(updates, state: FoofState, params=None, extras: Extras | None = None):
         del params
+        rt = schedrt.from_extras(extras)
+        pol = rt.resolve(policy, interval)
         flat = kvlib.flatten_params(updates)
         fresh_flat = _extract(extras.stats, fields)
         plan = _stats_plan(flat, fresh_flat, extras)
         fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
         stats, running = kvlib.update_running(state.running, fresh, kf_decay)
 
-        def recompute(_):
-            return {k: pre.map_bucket(lambda m: _damped_inv(m, gamma),
-                                      st.a_outer)
-                    for k, st in stats.items()}
-
-        refresh = (state.count % interval) == 0
-        a_inv = jax.lax.cond(refresh, recompute, lambda _: state.a_inv,
-                             operand=None)
+        refresh, staleness = pol.decide(state.sched, stats)
+        a_inv = schedrt.sharded_refresh(
+            plan, refresh, lambda b, m: _damped_inv(m, gamma),
+            {k: st.a_outer for k, st in stats.items()},
+            dict(state.a_inv),
+            cost=ownership.inverse_cost('left'), shard=rt.shard_refresh)
+        sched = schedpol.commit(pol, state.sched, stats, refresh, staleness)
 
         ops = {k: kvlib.LayerStats(a_outer=a_inv[k]) for k in a_inv}
         out = pre.precondition_tree(flat, ops, 'foof_cached', gamma, plan=plan)
         return kvlib.unflatten_params(out), FoofState(
-            running=running, a_inv=a_inv, count=state.count + 1)
+            running=running, a_inv=a_inv, sched=sched)
 
     return GradientTransformation(init, update)
 
 
 def foof(lr=0.1, gamma: float = 0.03, kf_decay: float = 0.95, interval: int = 1,
-         momentum: float = 0.9, weight_decay: float = 0.0) -> GradientTransformation:
+         momentum: float = 0.9, weight_decay: float = 0.0,
+         policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
-    parts.append(foof_preconditioner(gamma, kf_decay, interval))
+    parts.append(foof_preconditioner(gamma, kf_decay, interval, policy=policy))
     parts.append(kl_normalize())
     parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))

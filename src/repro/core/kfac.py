@@ -1,9 +1,11 @@
-"""K-FAC baseline (paper Eq. 5) with update-interval support.
+"""K-FAC baseline (paper Eq. 5), scheduled through the refresh runtime.
 
 KF EMAs are refreshed every step (cheap relative to the inverses); the
-explicit damped inverses are recomputed every ``interval`` steps under a
-``lax.cond`` and cached in state — exactly the staleness trade-off the paper
-studies in Fig. 6.
+explicit damped inverses are recomputed when the refresh policy fires
+(``every_k(interval)`` reproduces the legacy ``count % interval`` branch
+bit-exactly) — exactly the staleness trade-off the paper studies in Fig. 6.
+Under a live data-parallel mesh each worker inverts only its owned bucket
+slices and the results are psum-exchanged (``repro.schedule``).
 
 Bucketed: Kronecker factors, cached inverses and the EMA all live
 bucket-stacked; recomputation is one fused ``lax.map`` per bucket and the
@@ -12,7 +14,7 @@ inverse application is one batched two-sided contraction per bucket via
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +27,7 @@ from repro.core.eva import _extract, _stats_plan, _zeros_like_spec
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
+from repro.schedule import ownership, policy as schedpol, runtime as schedrt
 from repro.sharding.constraints import pmean_stats
 
 
@@ -32,7 +35,7 @@ class KfacState(NamedTuple):
     running: kvlib.RunningStats
     a_inv: dict
     b_inv: dict
-    count: jnp.ndarray
+    sched: schedpol.SchedState
 
 
 def _damped_inv(m: jnp.ndarray, gamma) -> jnp.ndarray:
@@ -43,7 +46,9 @@ def _damped_inv(m: jnp.ndarray, gamma) -> jnp.ndarray:
 
 
 def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
-                        interval: int = 1) -> GradientTransformation:
+                        interval: int = 1,
+                        policy: Optional[schedpol.RefreshPolicy] = None
+                        ) -> GradientTransformation:
     fields = ('a_outer', 'b_outer')
 
     def init(params, extras: Extras | None = None):
@@ -56,49 +61,53 @@ def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
         run = kvlib.init_running(zeros)
         a_inv = {k: jnp.zeros_like(st.a_outer) for k, st in run.stats.items()}
         b_inv = {k: jnp.zeros_like(st.b_outer) for k, st in run.stats.items()}
+        pol = schedrt.from_extras(extras).resolve(policy, interval)
         return KfacState(running=run, a_inv=a_inv, b_inv=b_inv,
-                         count=jnp.zeros((), jnp.int32))
+                         sched=schedpol.init_state(pol, run.stats))
 
     def update(updates, state: KfacState, params=None, extras: Extras | None = None):
         del params
+        rt = schedrt.from_extras(extras)
+        pol = rt.resolve(policy, interval)
         flat = kvlib.flatten_params(updates)
         fresh_flat = _extract(extras.stats, fields)
         plan = _stats_plan(flat, fresh_flat, extras)
         fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
         stats, running = kvlib.update_running(state.running, fresh, kf_decay)
 
-        def one(ao, bo):
+        def one(b, args):
+            del b
+            ao, bo = args
             gamma_r, gamma_q = pre.kfac_pi_damping(ao, bo, gamma)
             return _damped_inv(ao, gamma_r), _damped_inv(bo, gamma_q)
 
-        def recompute(_):
-            a_inv, b_inv = {}, {}
-            for k, st in stats.items():
-                a_inv[k], b_inv[k] = pre.map_bucket(one, st.a_outer, st.b_outer)
-            return a_inv, b_inv
-
-        def keep(_):
-            return state.a_inv, state.b_inv
-
-        refresh = (state.count % interval) == 0
-        a_inv, b_inv = jax.lax.cond(refresh, recompute, keep, operand=None)
+        refresh, staleness = pol.decide(state.sched, stats)
+        new = schedrt.sharded_refresh(
+            plan, refresh, one,
+            {k: (st.a_outer, st.b_outer) for k, st in stats.items()},
+            {k: (state.a_inv[k], state.b_inv[k]) for k in state.a_inv},
+            cost=ownership.inverse_cost('both'), shard=rt.shard_refresh)
+        a_inv = {k: v[0] for k, v in new.items()}
+        b_inv = {k: v[1] for k, v in new.items()}
+        sched = schedpol.commit(pol, state.sched, stats, refresh, staleness)
 
         ops = {k: kvlib.LayerStats(a_outer=a_inv[k], b_outer=b_inv[k])
                for k in a_inv}
         out = pre.precondition_tree(flat, ops, 'kfac_cached', gamma, plan=plan)
         return kvlib.unflatten_params(out), KfacState(
-            running=running, a_inv=a_inv, b_inv=b_inv, count=state.count + 1)
+            running=running, a_inv=a_inv, b_inv=b_inv, sched=sched)
 
     return GradientTransformation(init, update)
 
 
 def kfac(lr=0.1, gamma: float = 0.03, kf_decay: float = 0.95,
          interval: int = 1, kl_kappa: float = 1e-3, momentum: float = 0.9,
-         weight_decay: float = 0.0) -> GradientTransformation:
+         weight_decay: float = 0.0,
+         policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
-    parts.append(kfac_preconditioner(gamma, kf_decay, interval))
+    parts.append(kfac_preconditioner(gamma, kf_decay, interval, policy=policy))
     if kl_kappa is not None:
         # momentum lives INSIDE the trust region (see clipping.kl_clip_trace)
         parts.append(kl_clip_trace(kl_kappa, lr, momentum))

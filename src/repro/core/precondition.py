@@ -176,12 +176,20 @@ def precondition_tree(updates: dict, aux: dict, method: str, gamma: float, *,
     Bucket layout & version support: buckets group paths by (shape, dtype)
     with a new stacking axis 0 (``bucketing.build_plan``); scan-stacked
     leaves keep their leading layer/expert dims inside the bucket shape.
-    Outputs are bit-identical to the per-path loop over the formulas above:
-    broadcast batching is used where XLA guarantees per-item reduction
-    order (rank-one methods, operator application), and a single fused
-    ``lax.map`` per bucket where LAPACK batching would change numerics
-    (solves/inverse roots).  Runs on jax 0.4.37 through current jax — mesh
-    interaction goes through ``repro.sharding.compat``.
+    Small buckets (``Bucket.stacked == False``, below the plan's
+    min-bucket-size) skip the stack/unstack copies entirely and run the
+    same formulas per path — on CPU the gather/scatter for an N<=2 bucket
+    costs more than the single launch it saves.  For the rank-one methods
+    and the ``*_cached`` operator application (everything the optimizers
+    run) outputs are bit-identical to the per-path loop over the formulas
+    above at ANY threshold: broadcast batching is used exactly where XLA
+    guarantees per-item reduction order.  The direct solve/eigh methods
+    (foof/kfac/shampoo) use one fused ``lax.map`` per stacked bucket —
+    bit-identical to per-item calls of the same form, but the stacked
+    (compiled scan body) and unstacked (eager) paths may differ in the
+    last ulp, so across *different* thresholds they only agree to float
+    tolerance (see tests/test_bucketing.py).  Runs on jax 0.4.37 through
+    current jax — mesh interaction goes through ``repro.sharding.compat``.
     """
     from repro.core import bucketing
 
@@ -194,12 +202,12 @@ def precondition_tree(updates: dict, aux: dict, method: str, gamma: float, *,
                 'precondition_tree: no aux key matches an update path — '
                 'bucket-keyed aux requires an explicit plan=')
         plan = bucketing.build_plan(sel)
-    aux_b = aux if bucketing.is_bucketed(plan, aux) \
-        else bucketing.gather_tree(plan, aux)
-    g_b = bucketing.gather(plan, {p: updates[p] for p in plan.paths})
+    aux_is_bucketed = bucketing.is_bucketed(plan, aux)
 
-    def one_bucket(bucket, g):
-        st = aux_b[bucket.key]
+    def one_bucket(bucket, g, st, stacked):
+        """g/st carry a leading stack axis when ``stacked``; the rank-one
+        and cached-operator formulas broadcast over it, the LAPACK methods
+        fuse it with one ``lax.map`` (or apply directly per item)."""
         if method == 'eva':
             return eva_precondition(g, st.a_mean, st.b_mean, gamma,
                                     use_pallas=use_pallas)
@@ -210,14 +218,20 @@ def precondition_tree(updates: dict, aux: dict, method: str, gamma: float, *,
             return eva_s_precondition(g, st.a_mean, st.b_mean, gamma,
                                       use_pallas=use_pallas)
         if method == 'foof':
+            if not stacked:
+                return foof_precondition(g, st.a_outer, gamma)
             return jax.lax.map(
                 lambda t: foof_precondition(t[0], t[1], gamma),
                 (g, st.a_outer))
         if method == 'kfac':
+            if not stacked:
+                return kfac_precondition(g, st.a_outer, st.b_outer, gamma)
             return jax.lax.map(
                 lambda t: kfac_precondition(t[0], t[1], t[2], gamma),
                 (g, st.a_outer, st.b_outer))
         if method == 'shampoo':
+            if not stacked:
+                return shampoo_precondition(g, st.a_outer, st.b_outer, gamma)
             return jax.lax.map(
                 lambda t: shampoo_precondition(t[0], t[1], t[2], gamma),
                 (g, st.a_outer, st.b_outer))
@@ -227,9 +241,23 @@ def precondition_tree(updates: dict, aux: dict, method: str, gamma: float, *,
             return apply_two_sided(g, st.a_outer, st.b_outer)
         raise ValueError(f'unknown method {method!r}')
 
-    out_b = bucketing.map_buckets(one_bucket, plan, g_b)
     out = dict(updates)
-    out.update(bucketing.scatter(plan, out_b))
+    big = [b for b in plan.buckets if b.stacked]
+    if big:
+        sub = bucketing.BucketPlan(buckets=tuple(big))
+        aux_b = {b.key: aux[b.key] for b in big} if aux_is_bucketed \
+            else bucketing.gather_tree(sub, aux)
+        g_b = bucketing.gather(sub, {p: updates[p] for p in sub.paths})
+        out_b = {b.key: one_bucket(b, g_b[b.key], aux_b[b.key], True)
+                 for b in big}
+        out.update(bucketing.scatter(sub, out_b))
+    for b in plan.buckets:
+        if b.stacked:
+            continue
+        for i, p in enumerate(b.paths):
+            st = jax.tree_util.tree_map(lambda x, i=i: x[i], aux[b.key]) \
+                if aux_is_bucketed else aux[p]
+            out[p] = one_bucket(b, updates[p], st, False)
     return out
 
 

@@ -12,7 +12,7 @@ per bucket via ``precondition_tree``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +25,7 @@ from repro.core.eva_s import default_precon_predicate
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
+from repro.schedule import ownership, policy as schedpol, runtime as schedrt
 
 
 class ShampooState(NamedTuple):
@@ -32,15 +33,15 @@ class ShampooState(NamedTuple):
     m_out: dict   # {bucket: (N, ..., d_out, d_out)}
     p_in: dict    # cached (M+γI)^{-1/4}
     p_out: dict
-    count: jnp.ndarray
+    sched: schedpol.SchedState
 
 
 def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
                            interval: int = 1,
+                           policy: Optional[schedpol.RefreshPolicy] = None,
                            predicate=default_precon_predicate) -> GradientTransformation:
 
     def init(params, extras: Extras | None = None):
-        del extras
         flat = kvlib.flatten_params(params)
         plan = bucketing.build_plan(flat, predicate)
         m_in, m_out = {}, {}
@@ -51,14 +52,17 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
                 jnp.eye(d_in, dtype=jnp.float32), lead + (d_in, d_in))
             m_out[b.key] = eps_init * jnp.broadcast_to(
                 jnp.eye(d_out, dtype=jnp.float32), lead + (d_out, d_out))
+        pol = schedrt.from_extras(extras).resolve(policy, interval)
         return ShampooState(
             m_in=m_in, m_out=m_out,
             p_in=jax.tree_util.tree_map(jnp.zeros_like, m_in),
             p_out=jax.tree_util.tree_map(jnp.zeros_like, m_out),
-            count=jnp.zeros((), jnp.int32))
+            sched=schedpol.init_state(pol, {'m_in': m_in, 'm_out': m_out}))
 
     def update(updates, state: ShampooState, params=None, extras: Extras | None = None):
-        del params, extras
+        del params
+        rt = schedrt.from_extras(extras)
+        pol = rt.resolve(policy, interval)
         flat = kvlib.flatten_params(updates)
         plan = bucketing.build_plan(flat, predicate)
         g_b = bucketing.gather(plan, {p: flat[p] for p in plan.paths})
@@ -68,32 +72,41 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
             m_in[b.key] = state.m_in[b.key] + jnp.einsum('...io,...jo->...ij', g, g)
             m_out[b.key] = state.m_out[b.key] + jnp.einsum('...io,...ij->...oj', g, g)
 
-        def recompute(_):
-            return ({k: pre.map_bucket(lambda m: pre._inv_proot_psd(m, gamma, 0.25),
-                                       m_in[k]) for k in m_in},
-                    {k: pre.map_bucket(lambda m: pre._inv_proot_psd(m, gamma, 0.25),
-                                       m_out[k]) for k in m_out})
+        accum = {'m_in': m_in, 'm_out': m_out}
+        refresh, staleness = pol.decide(state.sched, accum)
 
-        refresh = (state.count % interval) == 0
-        p_in, p_out = jax.lax.cond(
-            refresh, recompute, lambda _: (state.p_in, state.p_out), operand=None)
+        def one(b, args):
+            del b
+            mi, mo = args
+            return (pre._inv_proot_psd(mi, gamma, 0.25),
+                    pre._inv_proot_psd(mo, gamma, 0.25))
+
+        new = schedrt.sharded_refresh(
+            plan, refresh, one,
+            {k: (m_in[k], m_out[k]) for k in m_in},
+            {k: (state.p_in[k], state.p_out[k]) for k in state.p_in},
+            cost=ownership.inverse_cost('both'), shard=rt.shard_refresh)
+        p_in = {k: v[0] for k, v in new.items()}
+        p_out = {k: v[1] for k, v in new.items()}
+        sched = schedpol.commit(pol, state.sched, accum, refresh, staleness)
 
         ops = {k: kvlib.LayerStats(a_outer=p_in[k], b_outer=p_out[k])
                for k in p_in}
         out = pre.precondition_tree(flat, ops, 'shampoo_cached', gamma, plan=plan)
         return kvlib.unflatten_params(out), ShampooState(
-            m_in=m_in, m_out=m_out, p_in=p_in, p_out=p_out, count=state.count + 1)
+            m_in=m_in, m_out=m_out, p_in=p_in, p_out=p_out, sched=sched)
 
     return GradientTransformation(init, update)
 
 
 def shampoo(lr=0.1, gamma: float = 1e-4, interval: int = 1,
             momentum: float = 0.9, weight_decay: float = 0.0,
-            graft: bool = True) -> GradientTransformation:
+            graft: bool = True,
+            policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
-    parts.append(shampoo_preconditioner(gamma, interval=interval))
+    parts.append(shampoo_preconditioner(gamma, interval=interval, policy=policy))
     if graft:
         parts.append(graft_to_grad_magnitude())
     parts.append(ema_trace(momentum))

@@ -37,6 +37,10 @@ class Extras:
         ``init_opt_state`` time; bucketed preconditioners use it instead of
         re-deriving the grouping (the fallback is a memoized re-derivation,
         so omitting it is always correct, just redundant work at trace time).
+      sched: optional ``repro.schedule.RefreshRuntime`` — the curvature
+        refresh runtime threaded next to the plan: default refresh policy
+        and the worker-sharded-ownership switch.  Omitting it leaves each
+        preconditioner on its own ``policy``/``interval`` arguments.
     """
 
     raw_grads: Any = None
@@ -44,6 +48,7 @@ class Extras:
     loss: Any = None
     step: Any = None
     plan: Any = None
+    sched: Any = None
 
 
 class GradientTransformation(NamedTuple):

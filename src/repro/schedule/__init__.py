@@ -1,0 +1,29 @@
+"""Curvature refresh runtime (paper Fig. 6, §3.3).
+
+Owns every decision about *when* cached curvature (factor inverses, KV
+snapshots) is recomputed and *where* (which data-parallel worker) the
+recomputation runs.  Three pieces:
+
+* ``policy``    — refresh policies as pure pytree-state objects
+                  (``every_k`` / ``warmup_then_k`` / ``adaptive``),
+* ``ownership`` — deterministic worker-sharded bucket-item assignment
+                  (inverse FLOPs scale 1/W with world size),
+* ``runtime``   — the ``RefreshRuntime`` façade the optimizers and the
+                  train step talk to.
+"""
+from repro.schedule.policy import (SchedState, RefreshPolicy, adaptive,
+                                   every_k, init_state, commit, named_policy,
+                                   warmup_then_k)
+from repro.schedule.ownership import (assign_owners, describe_ownership,
+                                      inverse_cost, world_and_rank)
+from repro.schedule.runtime import (RefreshRuntime, from_extras,
+                                    sched_states, schedule_metrics,
+                                    sharded_refresh)
+
+__all__ = [
+    'SchedState', 'RefreshPolicy', 'every_k', 'warmup_then_k', 'adaptive',
+    'named_policy', 'init_state', 'commit',
+    'assign_owners', 'describe_ownership', 'inverse_cost', 'world_and_rank',
+    'RefreshRuntime', 'from_extras', 'sched_states', 'schedule_metrics',
+    'sharded_refresh',
+]

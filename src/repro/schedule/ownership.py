@@ -1,0 +1,123 @@
+"""Worker-sharded refresh ownership: which data-parallel worker recomputes
+which bucket item.
+
+Every worker holding identical (psum-averaged) curvature statistics and
+redundantly inverting every bucket item is exactly the waste distributed
+K-FAC-style layer assignment eliminates (cf. MKOR's distributed factor
+maintenance).  This module assigns each (bucket, item) to one worker of the
+live ``('pod','data')`` mesh — a deterministic, cost-weighted round-robin
+(longest-processing-time greedy over the per-item inverse FLOP estimate
+from the bucket plan) — so refresh FLOPs scale 1/W with world size.  The
+refreshed slices are then exchanged with one bucket-stacked ``psum`` (each
+non-owner contributes zeros, so the sum reconstructs every item bit-exactly:
+``x + 0 == x`` in IEEE arithmetic, which is what makes W-worker refresh
+bit-identical to single-host refresh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketing import Bucket, BucketPlan
+from repro.sharding import compat
+from repro.sharding.constraints import data_axes_in_scope
+
+
+# ---------------------------------------------------------------------------
+# Per-item cost model
+
+
+def inverse_cost(sides: str = 'both') -> Callable[[Bucket], float]:
+    """FLOP estimate for refreshing ONE item of a bucket: dense
+    factorizations are cubic in the factor dim, and scan-stacked leading
+    dims multiply (an item of a ``(L, d_in, d_out)`` bucket refreshes L
+    factor pairs).
+
+    sides: 'left' (FOOF: input factor only) or 'both' (K-FAC / Shampoo).
+    """
+    if sides not in ('left', 'both'):
+        raise ValueError(f"sides must be 'left' or 'both', got {sides!r}")
+
+    def cost(bucket: Bucket) -> float:
+        d_in, d_out = bucket.shape[-2], bucket.shape[-1]
+        lead = 1
+        for d in bucket.shape[:-2]:
+            lead *= d
+        c = float(d_in) ** 3
+        if sides == 'both':
+            c += float(d_out) ** 3
+        return lead * c
+
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# Assignment
+
+
+@functools.lru_cache(maxsize=256)
+def _assign_cached(plan: BucketPlan, costs: tuple, world: int) -> dict:
+    owners = {b.key: np.zeros(len(b.paths), np.int64) for b in plan.buckets}
+    if world > 1:
+        items = [(costs[bi], b.key, i)
+                 for bi, b in enumerate(plan.buckets)
+                 for i in range(len(b.paths))]
+        # LPT greedy = weighted round-robin: biggest items first, each to the
+        # least-loaded worker; ties broken by (key, item) so the map is a
+        # pure function of (plan, cost, world) on every host.
+        items.sort(key=lambda t: (-t[0], t[1], t[2]))
+        loads = np.zeros(world, np.float64)
+        for c, key, i in items:
+            w = int(np.argmin(loads))
+            owners[key][i] = w
+            loads[w] += c
+    return owners
+
+
+def assign_owners(plan: BucketPlan, cost: Callable[[Bucket], float],
+                  world: int) -> dict[str, np.ndarray]:
+    """{bucket_key: (N,) int array of owner ranks in [0, world)} — static
+    (numpy) metadata, deterministic across hosts."""
+    costs = tuple(cost(b) for b in plan.buckets)
+    return _assign_cached(plan, costs, world)
+
+
+def describe_ownership(plan: BucketPlan, world: int,
+                       sides: str = 'both') -> dict[str, list[int]]:
+    """JSON-able owner map (trainer logging)."""
+    owners = assign_owners(plan, inverse_cost(sides), world)
+    return {k: [int(w) for w in v] for k, v in owners.items()}
+
+
+# ---------------------------------------------------------------------------
+# Mesh introspection (trace-time)
+
+
+def world_and_rank(axes: Optional[tuple[str, ...]] = None):
+    """(world, rank) over the data-parallel axes bound in the current
+    tracing scope.  ``world`` is a static int; ``rank`` is a traced scalar
+    (row-major over the bound axes), or None when single-worker.
+
+    Outside any shard_map/pmap body this is (1, None): refresh sharding
+    quietly disables itself and every worker (the only worker) owns
+    everything — which is what makes single-host behavior the W=1 special
+    case of the same code path rather than a separate branch.
+    """
+    if axes is None:
+        axes = data_axes_in_scope()
+    if not axes:
+        return 1, None
+    sizes = compat.bound_axis_sizes()
+    world = 1
+    for a in axes:
+        world *= int(sizes.get(a, 1))
+    if world <= 1:
+        return 1, None
+    rank = jnp.zeros((), jnp.int32)
+    for a in axes:
+        rank = rank * int(sizes.get(a, 1)) + jax.lax.axis_index(a)
+    return world, rank

@@ -1,0 +1,190 @@
+"""Refresh policies: pure pytree-state decisions about curvature staleness.
+
+The paper's Fig. 6 argument is that second-order cost is dominated by *when*
+curvature is refreshed: K-FAC amortizes factor inversions over an update
+interval while Eva's vectorized form is cheap enough to refresh every step.
+Before this module each optimizer carried its own ``count % interval``
+branch; now the decision is a :class:`RefreshPolicy` — a named pair of pure
+functions over a shared :class:`SchedState` pytree — so every method (the
+explicit-inverse baselines *and* the eva family) gets the same knob, the
+state checkpoints with the optimizer, and new policies need no optimizer
+changes.
+
+Contract: with ``every_k(1)`` the scheduled path is bit-identical (atol=0)
+to always-fresh recomputation — ``tests/test_schedule.py`` proves it for all
+six methods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SchedState(NamedTuple):
+    """Refresh bookkeeping carried inside optimizer state (checkpointable).
+
+    Attributes:
+      count: int32 — update steps observed (the decide for step t sees t).
+      since: int32 — steps since the last refresh (0 right after one).
+      n_refresh: int32 — cumulative refreshes (trainer logging).
+      staleness: f32 — last value of the policy's staleness proxy.
+      snapshot: stats pytree at the last refresh (adaptive policies), or
+        None for counter-only policies so checkpoints stay small.
+    """
+
+    count: jnp.ndarray
+    since: jnp.ndarray
+    n_refresh: jnp.ndarray
+    staleness: jnp.ndarray
+    snapshot: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshPolicy:
+    """A refresh decision: ``decide(state, stats) -> (refresh, staleness)``.
+
+    ``decide`` is pure and jit-traceable; ``refresh`` is a scalar bool array
+    (replicated across workers — every worker must agree so the gated
+    recompute branches stay SPMD-consistent) and ``staleness`` a scalar f32
+    proxy recorded for logging.  ``wants_snapshot`` policies get a stats
+    snapshot maintained for them by :func:`commit`.
+    """
+
+    name: str
+    decide: Callable[[SchedState, Any], tuple[jnp.ndarray, jnp.ndarray]]
+    wants_snapshot: bool = False
+
+
+def init_state(policy: RefreshPolicy, stats_template: Any) -> SchedState:
+    """Zero-initialized SchedState; snapshot allocated only when needed."""
+    snap = None
+    if policy.wants_snapshot and stats_template is not None:
+        snap = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.float32), stats_template)
+    z = jnp.zeros((), jnp.int32)
+    return SchedState(count=z, since=z, n_refresh=z,
+                      staleness=jnp.zeros((), jnp.float32), snapshot=snap)
+
+
+def commit(policy: RefreshPolicy, state: SchedState, stats: Any,
+           refresh: jnp.ndarray, staleness: jnp.ndarray) -> SchedState:
+    """Advance counters after a decided step; snapshot updates where
+    refreshed (``jnp.where`` keeps it jit-safe under a traced decision)."""
+    snap = state.snapshot
+    if policy.wants_snapshot and snap is not None:
+        snap = jax.tree_util.tree_map(
+            lambda s, f: jnp.where(refresh, f.astype(s.dtype), s),
+            snap, stats)
+    one = jnp.ones((), jnp.int32)
+    return SchedState(
+        count=state.count + one,
+        since=jnp.where(refresh, jnp.zeros((), jnp.int32), state.since + one),
+        n_refresh=state.n_refresh + refresh.astype(jnp.int32),
+        staleness=jnp.asarray(staleness, jnp.float32),
+        snapshot=snap)
+
+
+# ---------------------------------------------------------------------------
+# Policies
+
+
+def every_k(k: int = 1) -> RefreshPolicy:
+    """Refresh every ``k`` steps — reproduces the historical per-optimizer
+    ``count % interval == 0`` branch exactly (count starts at 0, so step 0
+    always refreshes)."""
+    if k < 1:
+        raise ValueError(f'every_k needs k >= 1, got {k}')
+
+    def decide(state: SchedState, stats):
+        del stats
+        refresh = (state.count % k) == 0
+        return refresh, state.since.astype(jnp.float32)
+
+    return RefreshPolicy(name=f'every_k({k})', decide=decide)
+
+
+def warmup_then_k(warmup: int, k: int) -> RefreshPolicy:
+    """Refresh every step for the first ``warmup`` steps (while curvature
+    EMAs are still moving fast), then every ``k`` — the standard production
+    K-FAC schedule (cf. MKOR's fac/kfac update-freq split)."""
+    if warmup < 0 or k < 1:
+        raise ValueError(f'warmup_then_k needs warmup >= 0, k >= 1; '
+                         f'got ({warmup}, {k})')
+
+    def decide(state: SchedState, stats):
+        del stats
+        in_warmup = state.count < warmup
+        periodic = ((state.count - warmup) % k) == 0
+        return in_warmup | periodic, state.since.astype(jnp.float32)
+
+    return RefreshPolicy(name=f'warmup_then_k({warmup},{k})', decide=decide)
+
+
+def drift(snapshot: Any, stats: Any) -> jnp.ndarray:
+    """Relative L2 drift of the bucket-stacked statistics since the last
+    refresh: ``‖stats − snapshot‖ / (‖snapshot‖ + ε)`` over all leaves —
+    the cheap staleness proxy (a handful of reductions over arrays the
+    optimizer already holds; no inverse is touched)."""
+    def sq(t):
+        leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+                  for x in jax.tree_util.tree_leaves(t)]
+        return sum(leaves, jnp.zeros((), jnp.float32))
+
+    diff = jax.tree_util.tree_map(
+        lambda s, f: f.astype(jnp.float32) - s.astype(jnp.float32),
+        snapshot, stats)
+    return jnp.sqrt(sq(diff)) / (jnp.sqrt(sq(snapshot)) + 1e-12)
+
+
+def adaptive(threshold: float = 0.05,
+             max_interval: Optional[int] = None) -> RefreshPolicy:
+    """Staleness-aware: refresh when the relative drift of the curvature
+    statistics since the last refresh exceeds ``threshold`` (always at step
+    0, and at least every ``max_interval`` steps when given).  Early in
+    training the stats move fast and refreshes are frequent; near
+    convergence they plateau and the inverse cost amortizes itself."""
+    if threshold <= 0:
+        raise ValueError(f'adaptive needs threshold > 0, got {threshold}')
+
+    def decide(state: SchedState, stats):
+        if state.snapshot is None:
+            raise ValueError(
+                'adaptive policy found no drift snapshot in SchedState — '
+                'the optimizer state was initialized under a different '
+                'policy.  Pass the same policy (or the same Extras.sched '
+                'runtime) to init and update.')
+        d = drift(state.snapshot, stats)
+        refresh = (state.count == 0) | (d > threshold)
+        if max_interval is not None:
+            refresh = refresh | (state.since >= (max_interval - 1))
+        # step 0 drifts from the zero snapshot — the forced refresh makes
+        # the decision right, but don't log that ratio as staleness
+        return refresh, jnp.where(state.count == 0, 0.0, d)
+
+    return RefreshPolicy(name=f'adaptive({threshold})', decide=decide,
+                         wants_snapshot=True)
+
+
+_NAMED: dict[str, Callable[..., RefreshPolicy]] = {
+    'every_k': every_k,
+    'warmup_then_k': warmup_then_k,
+    'adaptive': adaptive,
+}
+
+
+def named_policy(name: str, **kwargs) -> RefreshPolicy:
+    """Registry entry point for benchmarks/launchers: ``named_policy(
+    'every_k', k=5)``."""
+    if name not in _NAMED:
+        raise KeyError(f'unknown policy {name!r}; have {sorted(_NAMED)}')
+    return _NAMED[name](**kwargs)
+
+
+def resolve(policy: Optional[RefreshPolicy], interval: int = 1) -> RefreshPolicy:
+    """An explicit policy wins; otherwise the optimizer's legacy ``interval``
+    kwarg maps onto ``every_k`` so existing call sites keep their exact
+    behavior."""
+    return policy if policy is not None else every_k(interval)

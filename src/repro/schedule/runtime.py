@@ -1,0 +1,172 @@
+"""RefreshRuntime: the façade the optimizers and the train step talk to.
+
+One object owns the three scheduling concerns the optimizers used to
+re-implement ad hoc:
+
+* **policy resolution** — an optimizer's explicit ``policy=`` wins, else a
+  train-level default threaded through ``Extras.sched``, else the legacy
+  ``interval`` kwarg as ``every_k(interval)``;
+* **gated, worker-sharded recomputation** — :func:`sharded_refresh` wraps
+  the whole refresh in one ``lax.cond`` (skipped steps cost nothing) and,
+  under a live data-parallel mesh, gates each bucket item on ownership with
+  an inner ``lax.cond`` inside the stacked ``lax.map`` (``lax.map`` lowers
+  to ``scan``, so non-owned items really skip the inverse) before a
+  bucket-stacked psum exchange;
+* **observability** — :func:`schedule_metrics` pulls refresh counts /
+  staleness out of any optimizer state so the trainer can log them without
+  knowing optimizer internals.
+
+Bit-identity contract: with ``every_k(1)`` and/or a single worker, outputs
+are bit-identical (atol=0) to always-fresh recomputation; with W workers the
+psum-of-zero-padded-slices exchange preserves that bit-identity (see
+``repro.schedule.ownership``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bucketing import Bucket, BucketPlan
+from repro.schedule import ownership
+from repro.schedule import policy as policy_mod
+from repro.sharding.constraints import psum_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshRuntime:
+    """Train-level refresh configuration (static, not a pytree).
+
+    Attributes:
+      policy: default policy for optimizers built without an explicit one
+        (their legacy ``interval`` kwarg still wins over this default only
+        when it was explicitly set ≠ 1 — see :meth:`resolve`).
+      shard_refresh: gate worker-sharded ownership; turning it off makes
+        every worker recompute everything (the redundant pre-runtime
+        behavior, kept for A/B benchmarks).
+    """
+
+    policy: Optional[policy_mod.RefreshPolicy] = None
+    shard_refresh: bool = True
+
+    def resolve(self, local: Optional[policy_mod.RefreshPolicy],
+                interval: int = 1) -> policy_mod.RefreshPolicy:
+        if local is not None:
+            return local
+        if interval != 1:
+            # an explicitly-tuned legacy interval beats a train-level default
+            return policy_mod.every_k(interval)
+        return self.policy if self.policy is not None \
+            else policy_mod.every_k(1)
+
+
+_DEFAULT = RefreshRuntime()
+
+
+def from_extras(extras) -> RefreshRuntime:
+    """The runtime threaded through ``Extras.sched`` (next to the bucket
+    plan), or the default runtime when the caller drives the transform
+    directly."""
+    rt = getattr(extras, 'sched', None) if extras is not None else None
+    return rt if rt is not None else _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# Gated, worker-sharded refresh
+
+
+def sharded_refresh(plan: BucketPlan, refresh: jnp.ndarray,
+                    item_fn: Callable[[Bucket, Any], Any],
+                    args_b: Mapping[str, Any], old_b: Mapping[str, Any],
+                    *, cost: Callable[[Bucket], float],
+                    shard: bool = True) -> dict[str, Any]:
+    """Recompute cached per-bucket values under a refresh decision.
+
+    Args:
+      plan: the bucket plan whose stacked state is being refreshed.
+      refresh: traced scalar bool — the policy decision (replicated across
+        workers, so every worker takes the same cond branch).
+      item_fn: ``(bucket, per_item_args) -> per_item_out`` — the expensive
+        recomputation for ONE stack item (e.g. a damped-inverse pair).
+      args_b: {bucket_key: stacked-args pytree} (leading axis = stack).
+      old_b: {bucket_key: stacked cached values} returned unchanged on
+        non-refresh steps; also supplies output shapes/dtypes.
+      cost: per-item FLOP estimate for ownership weighting.
+      shard: disable to force every worker to recompute everything.
+
+    Returns {bucket_key: refreshed stacked values} with ``old_b``'s
+    structure.
+    """
+    world, rank = ownership.world_and_rank() if shard else (1, None)
+    owners = ownership.assign_owners(plan, cost, world)
+
+    def recompute(_):
+        out = {}
+        for b in plan.buckets:
+            args = args_b[b.key]
+            old = old_b[b.key]
+
+            def one(t, b=b, old=old):
+                idx, a = t
+                if world == 1:
+                    return item_fn(b, a)
+                own = jnp.asarray(owners[b.key])[idx]
+                zeros = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros(x.shape[1:], x.dtype), old)
+                return jax.lax.cond(own == rank,
+                                    lambda a: item_fn(b, a),
+                                    lambda a: zeros, a)
+
+            idx = jnp.arange(len(b.paths), dtype=jnp.int32)
+            out[b.key] = jax.lax.map(one, (idx, args))
+        if world > 1:
+            # exchange: owners contributed real slices, everyone else zeros;
+            # the psum reconstructs the full stack bit-exactly on all workers
+            out = psum_tree(out)
+        return out
+
+    def keep(_):
+        return {b.key: old_b[b.key] for b in plan.buckets}
+
+    return jax.lax.cond(refresh, recompute, keep, operand=None)
+
+
+# ---------------------------------------------------------------------------
+# Observability
+
+
+def sched_states(opt_state: Any) -> list[policy_mod.SchedState]:
+    """All SchedState nodes in an optimizer-state pytree (works on traced
+    and concrete states — the walk is over static Python structure)."""
+    found: list[policy_mod.SchedState] = []
+
+    def walk(x):
+        if isinstance(x, policy_mod.SchedState):
+            found.append(x)
+            return
+        if isinstance(x, dict):
+            for v in x.values():
+                walk(v)
+        elif isinstance(x, (list, tuple)):
+            for v in x:
+                walk(v)
+
+    walk(opt_state)
+    return found
+
+
+def schedule_metrics(opt_state: Any) -> dict[str, jnp.ndarray]:
+    """{'refreshes', 'refresh_since', 'staleness'} aggregated over every
+    scheduled transform in the state; {} when nothing is scheduled.  Usable
+    inside jit (returns traced scalars) and on concrete states."""
+    sts = sched_states(opt_state)
+    if not sts:
+        return {}
+    return {
+        'refreshes': sum((s.n_refresh for s in sts),
+                         jnp.zeros((), jnp.int32)),
+        'refresh_since': jnp.max(jnp.stack([s.since for s in sts])),
+        'staleness': jnp.max(jnp.stack([s.staleness for s in sts])),
+    }

@@ -93,6 +93,29 @@ def bound_axis_names() -> tuple[str, ...]:
     return ()
 
 
+def bound_axis_sizes() -> dict:
+    """{axis name: size} for mesh axes bound in the current tracing scope
+    (inside ``shard_map``/``pmap`` bodies); {} at top level.
+
+    Same env probe as ``bound_axis_names`` — a false-negative only disables
+    the optional worker-sharded refresh (every worker recomputes everything,
+    the always-correct fallback), never breaks tracing.
+    """
+    for mod in (getattr(jax, 'core', None),
+                getattr(getattr(jax, '_src', None), 'core', None)):
+        get_env = getattr(mod, 'get_axis_env', None)
+        if get_env is None:
+            continue
+        try:
+            env = get_env()
+            sizes = getattr(env, 'axis_sizes', None)
+            if sizes is not None:
+                return {str(k): int(v) for k, v in dict(sizes).items()}
+        except Exception:
+            pass
+    return {}
+
+
 def cost_analysis(compiled) -> dict:
     """``Compiled.cost_analysis()`` normalized across jax versions: 0.4.x
     returns a one-element list of per-program dicts, newer jax a dict."""

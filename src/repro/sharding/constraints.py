@@ -82,6 +82,22 @@ def pmean_stats(tree):
         lambda x: jax.lax.pmean(x, axes if len(axes) > 1 else axes[0]), tree)
 
 
+def psum_tree(tree, axes: Optional[tuple[str, ...]] = None):
+    """psum a pytree across the live data-parallel axes — the exchange step
+    of worker-sharded curvature refresh (``repro.schedule.ownership``): each
+    worker contributes its owned, zero-padded slices and the sum
+    reconstructs the full bucket stack on every worker (adding zeros is
+    exact in IEEE arithmetic, so the exchange preserves bit-identity with a
+    single-host refresh).  No-op when no data axis is bound.
+    """
+    if axes is None:
+        axes = data_axes_in_scope()
+    if not axes or tree is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.psum(x, axes if len(axes) > 1 else axes[0]), tree)
+
+
 def shard_activations(x: jnp.ndarray, seq: Optional[str] = None) -> jnp.ndarray:
     """Constrain dim0 (batch) to (pod,data); optionally dim1 (seq) to model.
     Falls back to sharding the sequence dim over 'data' for batch=1 cells."""

@@ -1,9 +1,10 @@
 from repro.train.checkpoint import (AsyncCheckpointer, available_steps, gc_old,
                                     latest_step, restore, save)
 from repro.train.step import (abstract_opt_state, compute_grads_and_stats,
-                              init_opt_state, make_train_step)
+                              init_opt_state, make_train_step, stats_plan_of)
 from repro.train.trainer import Trainer, TrainerConfig
 
 __all__ = ['AsyncCheckpointer', 'available_steps', 'gc_old', 'latest_step',
            'restore', 'save', 'abstract_opt_state', 'compute_grads_and_stats',
-           'init_opt_state', 'make_train_step', 'Trainer', 'TrainerConfig']
+           'init_opt_state', 'make_train_step', 'stats_plan_of', 'Trainer',
+           'TrainerConfig']

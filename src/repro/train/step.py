@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core.transform import Extras, GradientTransformation, apply_updates
+from repro.schedule import runtime as schedrt
 
 
 def _plan_for_stats(params_or_grads, stats) -> Optional[bucketing.BucketPlan]:
@@ -71,15 +72,22 @@ def make_train_step(model, opt: GradientTransformation,
                     capture: kvlib.CaptureConfig,
                     taps_fn: Optional[Callable] = None,
                     donate: bool = True,
-                    microbatches: int = 1) -> Callable:
+                    microbatches: int = 1,
+                    sched: Optional[schedrt.RefreshRuntime] = None) -> Callable:
     """Build the pure train step.  ``taps_fn(params)`` overrides tap creation
     (needed for full-tap K-FAC on the simple models).
+
+    ``sched`` is the curvature refresh runtime threaded through ``Extras``
+    next to the bucket plan (train-level default policy + worker-sharded
+    refresh switch); pass the same runtime to ``init_opt_state`` so the
+    scheduling state is allocated for the policy that will actually run.
 
     ``microbatches > 1`` runs gradient accumulation: the global batch is
     split on dim 0 and scanned, summing grads (f32) and averaging KV stats.
     This is what bounds activation memory at the 1T-param shape cells —
     saved-residual and MoE-dispatch peaks shrink by the microbatch factor
     (§Perf memory iteration)."""
+    sched = sched if sched is not None else schedrt.RefreshRuntime()
 
     def grads_of(params, batch):
         taps = taps_fn(params) if taps_fn is not None else None
@@ -122,23 +130,29 @@ def make_train_step(model, opt: GradientTransformation,
         updates, new_opt_state = opt.update(
             grads, opt_state, params=params,
             extras=Extras(stats=stats, loss=loss,
-                          plan=_plan_for_stats(grads, stats)))
+                          plan=_plan_for_stats(grads, stats), sched=sched))
         new_params = apply_updates(params, updates)
         grad_norm = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
             for g in jax.tree_util.tree_leaves(grads)))
-        return new_params, new_opt_state, {'loss': loss, 'grad_norm': grad_norm}
+        metrics = {'loss': loss, 'grad_norm': grad_norm}
+        # refresh-runtime observability: cumulative refreshes / staleness of
+        # every scheduled transform in the state ({} for unscheduled opts)
+        metrics.update(schedrt.schedule_metrics(new_opt_state))
+        return new_params, new_opt_state, metrics
 
     return train_step
 
 
 def init_opt_state(model, opt: GradientTransformation,
                    capture: kvlib.CaptureConfig, params, batch,
-                   taps_fn: Optional[Callable] = None):
+                   taps_fn: Optional[Callable] = None,
+                   sched: Optional[schedrt.RefreshRuntime] = None):
     """Materialized optimizer state (examples/trainer).  ``batch`` may be
     arrays or ShapeDtypeStructs — stats shapes come from eval_shape."""
+    sched = sched if sched is not None else schedrt.RefreshRuntime()
     if not capture.active:
-        return opt.init(params, None)
+        return opt.init(params, Extras(sched=sched))
 
     def stats_of(p, b):
         taps = taps_fn(p) if taps_fn is not None else None
@@ -149,13 +163,31 @@ def init_opt_state(model, opt: GradientTransformation,
     zero_stats = jax.tree_util.tree_map(
         lambda s: jnp.zeros(s.shape, s.dtype), stats_shapes)
     return opt.init(params, Extras(stats=zero_stats,
-                                   plan=_plan_for_stats(params, zero_stats)))
+                                   plan=_plan_for_stats(params, zero_stats),
+                                   sched=sched))
+
+
+def stats_plan_of(model, capture: kvlib.CaptureConfig, params, batch,
+                  taps_fn: Optional[Callable] = None
+                  ) -> Optional[bucketing.BucketPlan]:
+    """The bucket plan over preconditioned paths, without materializing any
+    state (trainer logging: the refresh-ownership map is keyed by it)."""
+    if not capture.active:
+        return None
+
+    def stats_of(p, b):
+        taps = taps_fn(p) if taps_fn is not None else None
+        return compute_grads_and_stats(model, p, b, capture, taps)[2]
+
+    stats_shapes = jax.eval_shape(stats_of, params, batch)
+    return _plan_for_stats(params, stats_shapes)
 
 
 def abstract_opt_state(model, opt: GradientTransformation,
                        capture: kvlib.CaptureConfig, params_abstract, batch_specs,
-                       taps_fn: Optional[Callable] = None):
+                       taps_fn: Optional[Callable] = None,
+                       sched: Optional[schedrt.RefreshRuntime] = None):
     """ShapeDtypeStruct pytree of the optimizer state (dry-run path)."""
     def init_fn(p, b):
-        return init_opt_state(model, opt, capture, p, b, taps_fn)
+        return init_opt_state(model, opt, capture, p, b, taps_fn, sched=sched)
     return jax.eval_shape(init_fn, params_abstract, batch_specs)

@@ -29,8 +29,10 @@ import numpy as np
 
 from repro.core import kv as kvlib
 from repro.core.transform import GradientTransformation
+from repro.schedule import ownership
+from repro.schedule import runtime as schedrt
 from repro.train import checkpoint as ckpt
-from repro.train.step import init_opt_state, make_train_step
+from repro.train.step import init_opt_state, make_train_step, stats_plan_of
 
 
 @dataclasses.dataclass
@@ -47,22 +49,46 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, model, opt: GradientTransformation,
                  capture: kvlib.CaptureConfig, cfg: TrainerConfig,
-                 taps_fn: Optional[Callable] = None):
+                 taps_fn: Optional[Callable] = None,
+                 sched: Optional[schedrt.RefreshRuntime] = None):
         self.model = model
         self.opt = opt
         self.capture = capture
         self.cfg = cfg
         self.taps_fn = taps_fn
+        self.sched = sched if sched is not None else schedrt.RefreshRuntime()
         self.out_dir = Path(cfg.out_dir)
         self.out_dir.mkdir(parents=True, exist_ok=True)
         self.ckpt_dir = self.out_dir / 'ckpt'
         self._ckptr = ckpt.AsyncCheckpointer(self.ckpt_dir, cfg.keep_ckpts)
-        step_fn = make_train_step(model, opt, capture, taps_fn=taps_fn)
+        step_fn = make_train_step(model, opt, capture, taps_fn=taps_fn,
+                                  sched=self.sched)
         self.step_fn = jax.jit(step_fn,
                                donate_argnums=(0, 1) if cfg.donate else ())
         self._preempted = False
         self._step_times: list[float] = []
         self.metrics_path = self.out_dir / 'metrics.jsonl'
+
+    # -- refresh-runtime observability ---------------------------------------
+
+    def _log_ownership(self, log_f, params, batch) -> None:
+        """One startup record: the per-bucket refresh-owner map a W-worker
+        data-parallel run of this model would use (W = local device count).
+        Purely informational — cheap (eval_shape only), never fatal."""
+        try:
+            plan = stats_plan_of(self.model, self.capture, params, batch,
+                                 taps_fn=self.taps_fn)
+        except Exception:
+            plan = None
+        if plan is None or not plan.buckets:
+            return
+        world = max(1, jax.device_count())
+        owners = ownership.describe_ownership(plan, world)
+        rec = {'event': 'refresh_ownership', 'world': world, 'owners': owners}
+        log_f.write(json.dumps(rec) + '\n')
+        log_f.flush()
+        print(f'[trainer] refresh ownership over W={world}: '
+              + ' '.join(f'{k}:{v}' for k, v in owners.items()), flush=True)
 
     # -- preemption ---------------------------------------------------------
 
@@ -95,7 +121,8 @@ class Trainer:
                             else init_opt_state(self.model, self.opt,
                                                 self.capture, params,
                                                 data.batch_at(0),
-                                                taps_fn=self.taps_fn)}
+                                                taps_fn=self.taps_fn,
+                                                sched=self.sched)}
                 state, meta = ckpt.restore(self.ckpt_dir, latest, template)
                 params, opt_state = state['params'], state['opt_state']
                 start_step = meta.get('next_step', latest)
@@ -104,7 +131,7 @@ class Trainer:
         if opt_state is None:
             opt_state = init_opt_state(self.model, self.opt, self.capture,
                                        params, data.batch_at(start_step),
-                                       taps_fn=self.taps_fn)
+                                       taps_fn=self.taps_fn, sched=self.sched)
 
         if self.cfg.donate:
             # the jitted step donates its inputs; don't delete caller-owned
@@ -113,6 +140,7 @@ class Trainer:
             opt_state = jax.tree_util.tree_map(lambda x: x + 0 if hasattr(x, 'dtype') else x, opt_state)
 
         log_f = self.metrics_path.open('a')
+        self._log_ownership(log_f, params, data.batch_at(start_step))
         history = []
         step = start_step
         try:
@@ -129,10 +157,17 @@ class Trainer:
                     rec = {'step': step, 'loss': loss,
                            'grad_norm': float(metrics['grad_norm']),
                            'step_time_s': round(dt, 4)}
+                    sched_line = ''
+                    if 'refreshes' in metrics:
+                        rec['refreshes'] = int(metrics['refreshes'])
+                        rec['staleness'] = float(metrics['staleness'])
+                        rec['refresh_since'] = int(metrics['refresh_since'])
+                        sched_line = (f" refreshes {rec['refreshes']}"
+                                      f" staleness {rec['staleness']:.3g}")
                     log_f.write(json.dumps(rec) + '\n')
                     log_f.flush()
                     print(f'[trainer] step {step:6d} loss {loss:.4f} '
-                          f'({dt*1e3:.0f} ms)', flush=True)
+                          f'({dt*1e3:.0f} ms){sched_line}', flush=True)
                 if cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
                     self._ckptr.save(step + 1,
                                      {'params': params, 'opt_state': opt_state},

@@ -160,6 +160,77 @@ def test_bucketed_aux_equals_flat_aux():
     _assert_bit_identical(out_bucketed, out_flat)
 
 
+def test_min_bucket_size_marks_small_buckets_unstacked():
+    """Default threshold: N<=2 buckets skip the stack/unstack copies (the
+    table5 CPU numbers — ROADMAP 'bucket gather cost'); grouping, keys and
+    state layout are unchanged."""
+    grads, _ = _make_tree()
+    plan = bucketing.build_plan(grads)
+    by_key = {b.key: b for b in plan.buckets}
+    assert by_key[bucketing.bucket_key((16, 8), jnp.float32)].stacked  # N=3
+    assert not by_key[bucketing.bucket_key((16, 4), jnp.float32)].stacked  # N=1
+    assert not by_key[bucketing.bucket_key((3, 12, 8), jnp.float32)].stacked  # N=2
+    # explicit threshold overrides
+    all_stacked = bucketing.build_plan(grads, min_bucket_size=1)
+    assert all(b.stacked for b in all_stacked.buckets)
+    none_stacked = bucketing.build_plan(grads, min_bucket_size=99)
+    assert not any(b.stacked for b in none_stacked.buckets)
+    # same grouping either way
+    assert [b.paths for b in plan.buckets] == \
+        [b.paths for b in all_stacked.buckets]
+
+
+@pytest.mark.parametrize('method', ['eva', 'eva_f', 'eva_s', 'eva_cached',
+                                    'kfac_cached'])
+@pytest.mark.parametrize('min_size', [1, 2, 99])
+def test_min_bucket_size_output_bit_identical(method, min_size):
+    """For every path the OPTIMIZERS actually run (rank-one broadcast +
+    cached-operator application), the threshold is invisible: any
+    min_bucket_size gives bit-identical outputs to the per-layer loop."""
+    grads, aux = _make_tree(seed=7)
+    plan = bucketing.build_plan(grads, min_bucket_size=min_size)
+    if method.endswith('_cached'):
+        ops = {p: kvlib.LayerStats(a_outer=aux[p].a_outer,
+                                   b_outer=aux[p].b_outer) for p in grads}
+        out = pre.precondition_tree(grads, ops, 'kfac_cached', GAMMA,
+                                    plan=plan)
+        ref = {p: pre.apply_two_sided(grads[p], aux[p].a_outer,
+                                      aux[p].b_outer) for p in grads}
+    else:
+        out = pre.precondition_tree(grads, aux, method, GAMMA, plan=plan)
+        ref = {p: PER_LAYER[method](grads[p], aux[p], False) for p in grads}
+    _assert_bit_identical(out, ref)
+
+
+@pytest.mark.parametrize('method', ['foof', 'kfac', 'shampoo'])
+@pytest.mark.parametrize('min_size', [1, 99])
+def test_min_bucket_size_lapack_methods_allclose(min_size, method):
+    """The direct solve/eigh methods flip between a compiled ``lax.map``
+    body (stacked) and eager per-path calls (unstacked), which — like
+    jit-vs-eager (see test_under_jit) — may differ in the last ulp; they
+    must still agree to float tolerance at every threshold.  (The
+    optimizers themselves only use the *_cached application, which is
+    exact — see test_min_bucket_size_output_bit_identical.)"""
+    grads, aux = _make_tree(seed=7)
+    ref = {p: PER_LAYER[method](grads[p], aux[p], False) for p in grads}
+    plan = bucketing.build_plan(grads, min_bucket_size=min_size)
+    out = pre.precondition_tree(grads, aux, method, GAMMA, plan=plan)
+    for p in ref:
+        np.testing.assert_allclose(np.asarray(out[p]), np.asarray(ref[p]),
+                                   rtol=1e-5, atol=1e-6, err_msg=p)
+
+
+def test_min_bucket_size_with_bucketed_state_aux():
+    """Optimizer state stays bucket-stacked for ALL buckets; the small-
+    bucket path must slice it per item and still match."""
+    grads, aux = _make_tree(seed=8)
+    plan = bucketing.build_plan(grads, min_bucket_size=99)  # all unstacked
+    aux_b = bucketing.gather_tree(plan, aux)  # state layout: always stacked
+    out = pre.precondition_tree(grads, aux_b, 'eva', GAMMA, plan=plan)
+    ref = {p: PER_LAYER['eva'](grads[p], aux[p], False) for p in grads}
+    _assert_bit_identical(out, ref)
+
+
 def test_under_jit():
     """The whole engine must trace cleanly (plans are static metadata)."""
     grads, aux = _make_tree(seed=5)

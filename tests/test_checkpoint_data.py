@@ -111,3 +111,66 @@ def test_ae_stream_range():
     b = AEStream(batch=3).batch_at(0)
     x = np.asarray(b['x'])
     assert x.min() >= 0.0 and x.max() <= 1.0 and x.shape == (3, 784)
+
+
+# ---------------------------------------------------------------------------
+# Refresh-runtime state must checkpoint: resume at step s is bit-exact with
+# an uninterrupted run, including a mid-interval phase (cached inverses +
+# counters) and adaptive-policy state (drift snapshot).
+
+
+def _sched_train(name, steps, tmp_path=None, save_at=None, **opt_kw):
+    import jax.numpy as jnp
+
+    from repro.core.registry import make_optimizer
+    from repro.models import module as M
+    from repro.models.simple import MLP, classifier_loss_fn
+    from repro.train.step import init_opt_state, make_train_step
+
+    stream = ClassStream(batch=32, dim=8, classes=3, seed=0)
+    model = MLP([8, 16, 3])
+    model.loss_fn = classifier_loss_fn(model)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    opt, capture = make_optimizer(name, lr=0.05, **opt_kw)
+    taps_fn = (lambda p: model.make_taps(32, capture)) \
+        if capture.needs_taps else None
+    state = init_opt_state(model, opt, capture, params, stream.batch_at(0),
+                           taps_fn=taps_fn)
+    step = jax.jit(make_train_step(model, opt, capture, taps_fn=taps_fn))
+    for i in range(steps):
+        if save_at is not None and i == save_at:
+            ckpt.save(tmp_path, i, {'params': params, 'opt_state': state},
+                      {'next_step': i})
+            template = jax.tree_util.tree_map(
+                jnp.zeros_like, {'params': params, 'opt_state': state})
+            restored, meta = ckpt.restore(tmp_path, i, template)
+            params, state = restored['params'], restored['opt_state']
+            assert meta['next_step'] == i
+        params, state, _ = step(params, state, stream.batch_at(i))
+    return params, state
+
+
+def _assert_bit_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize('name,kw,save_at', [
+    # save at step 4 = mid-interval for k=3 (last refresh at 3, cached
+    # inverses + since-counter must survive the roundtrip)
+    ('kfac', {'interval': 3}, 4),
+    ('shampoo', {'interval': 2}, 3),
+    # adaptive policy: the drift snapshot is part of the checkpoint
+    ('eva', {}, 4),
+])
+def test_refresh_state_resume_bit_exact(tmp_path, name, kw, save_at):
+    from repro.schedule.policy import adaptive
+
+    if name == 'eva':
+        kw = dict(kw, policy=adaptive(threshold=0.05))
+    steps = 7
+    p_ref, s_ref = _sched_train(name, steps, **kw)
+    p_res, s_res = _sched_train(name, steps, tmp_path=tmp_path,
+                                save_at=save_at, **kw)
+    _assert_bit_equal(p_ref, p_res)
+    _assert_bit_equal(s_ref, s_res)
