@@ -1,7 +1,9 @@
 """Shared benchmark helpers: timing, state sizing, CSV rows."""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Callable
 
 import jax
@@ -14,6 +16,26 @@ ROWS: list[tuple[str, float, str]] = []
 def emit(name: str, us_per_call: float, derived: str) -> None:
     ROWS.append((name, us_per_call, derived))
     print(f'{name},{us_per_call:.1f},{derived}')
+
+
+def write_json(path: str) -> None:
+    """Dump every row emitted so far to ``path`` as JSON — the BENCH_*.json
+    artifacts the CI benchmark-smoke job uploads, so the perf trajectory is
+    recorded per commit instead of scrolling away in logs.  The ``derived``
+    key=value pairs are split out so downstream tooling can diff them."""
+    rows = []
+    for name, us, derived in ROWS:
+        rec = {'name': name, 'us_per_call': us, 'derived': derived}
+        kv = {}
+        for part in derived.split(';'):
+            if '=' in part:
+                k, v = part.split('=', 1)
+                kv[k] = v
+        if kv:
+            rec['fields'] = kv
+        rows.append(rec)
+    Path(path).write_text(json.dumps(rows, indent=2) + '\n')
+    print(f'# wrote {path} ({len(rows)} rows)')
 
 
 def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:

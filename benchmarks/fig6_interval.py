@@ -7,14 +7,25 @@ is a *policy*, and every method takes the same knob, so the grid is now
 method × {every_k(1), every_k(5), every_k(20), adaptive} with the realized
 per-policy refresh count, the staleness proxy, per-step time and final
 loss in every cell.
+
+``--drift-sweep`` calibrates the adaptive policy on the demo-LM config
+(ROADMAP "Adaptive-policy calibration"): the drift threshold sweeps a
+0.01–0.2 log grid against the every_k Pareto points {1, 5, 20}, each cell
+emitting the realized refresh count and the tail-geomean loss (single-step
+losses near the floor are minibatch noise — see the verify notes).
 """
 from __future__ import annotations
 
-import jax
+import argparse
 
-from benchmarks.common import emit, time_fn
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn, write_json
+from repro.configs.registry import demo_lm
 from repro.core.registry import make_optimizer
-from repro.data.synthetic import ClassStream
+from repro.data.synthetic import ClassStream, LMStream
+from repro.models import build_model
 from repro.models import module as M
 from repro.models.simple import MLP, classifier_loss_fn
 from repro.schedule import runtime as schedrt
@@ -22,6 +33,9 @@ from repro.schedule.policy import adaptive, every_k
 from repro.train.step import init_opt_state, make_train_step
 
 STEPS = 40
+
+DRIFT_GRID = np.geomspace(0.01, 0.2, 6)
+PARETO_KS = (1, 5, 20)
 
 METHODS = ['eva', 'eva_f', 'eva_s', 'foof', 'kfac', 'shampoo']
 
@@ -33,7 +47,7 @@ POLICIES = [
 ]
 
 
-def run() -> None:
+def run(steps: int = STEPS, methods=None) -> None:
     stream = ClassStream(batch=128, dim=64, classes=10, spread=1.2)
 
     def train(name, policy):
@@ -47,20 +61,78 @@ def run() -> None:
                                taps_fn=taps_fn)
         step = jax.jit(make_train_step(model, opt, capture, taps_fn=taps_fn))
         t = time_fn(step, params, state, stream.batch_at(0))
-        for i in range(STEPS):
+        for i in range(steps):
             params, state, m = step(params, state, stream.batch_at(i))
         sched = schedrt.schedule_metrics(state)
         return (t, float(m['loss']), int(sched['refreshes']),
                 float(sched['staleness']))
 
-    for name in METHODS:
+    for name in (methods or METHODS):
         for plabel, make_policy in POLICIES:
             t, loss, refreshes, staleness = train(name, make_policy())
             emit(f'fig6/{name}@{plabel}', t,
-                 f'loss_at_{STEPS}={loss:.4f};refreshes={refreshes}/{STEPS};'
+                 f'loss_at_{steps}={loss:.4f};refreshes={refreshes}/{steps};'
                  f'staleness={staleness:.3g}')
 
 
-if __name__ == '__main__':
+def run_drift_sweep(methods: list[str], steps: int = 40) -> None:
+    """Adaptive-threshold calibration on the demo-LM config: refresh-count
+    vs tail-loss rows for each threshold, next to the every_k Pareto
+    points the thresholds must beat."""
+    cfg = demo_lm('small')
+    model = build_model(cfg)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    data = LMStream(vocab=cfg.vocab, seq_len=32, batch=8, seed=1)
+
+    def cell(method, label, policy):
+        opt, capture = make_optimizer(method, lr=0.05, policy=policy)
+        state = init_opt_state(model, opt, capture, params, data.batch_at(0))
+        step = jax.jit(make_train_step(model, opt, capture))
+        t = time_fn(step, params, state, data.batch_at(0))
+        p, s = params, state
+        losses = []
+        for i in range(steps):
+            p, s, m = step(p, s, data.batch_at(i))
+            losses.append(float(m['loss']))
+        sched = schedrt.schedule_metrics(s)
+        tail = float(np.exp(np.mean(np.log(np.asarray(losses[-8:])))))
+        emit(f'fig6/drift/{method}@{label}', t,
+             f'tail_loss={tail:.4f};refreshes={int(sched["refreshes"])}'
+             f'/{steps};staleness={float(sched["staleness"]):.3g}')
+
+    for method in methods:
+        for k in PARETO_KS:
+            cell(method, f'every{k}', every_k(k))
+        for thr in DRIFT_GRID:
+            cell(method, f'thr{thr:.3g}',
+                 adaptive(threshold=float(thr), max_interval=50))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument('--drift-sweep', action='store_true',
+                    help='adaptive drift-threshold calibration on the '
+                         'demo-LM config (0.01-0.2 log grid vs every_k '
+                         'Pareto points)')
+    ap.add_argument('--steps', type=int, default=40)
+    ap.add_argument('--methods', default=None,
+                    help='comma-separated method filter, used by BOTH the '
+                         'policy grid (default: all six; CI smoke passes a '
+                         'subset) and --drift-sweep (default: eva)')
+    ap.add_argument('--json', default=None, metavar='PATH',
+                    help='also write the emitted rows to PATH as JSON '
+                         '(CI benchmark artifacts)')
+    args = ap.parse_args()
+    methods = ([m.strip() for m in args.methods.split(',')]
+               if args.methods else None)
     print('name,us_per_call,derived')
-    run()
+    if args.drift_sweep:
+        run_drift_sweep(methods or ['eva'], steps=args.steps)
+    else:
+        run(steps=args.steps, methods=methods)
+    if args.json:
+        write_json(args.json)
+
+
+if __name__ == '__main__':
+    main()

@@ -15,7 +15,7 @@ import argparse
 
 import jax
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_json
 from benchmarks.fig4_autoencoder import train_one
 
 
@@ -104,12 +104,17 @@ def main() -> None:
     ap.add_argument('--bucketed', action='store_true',
                     help='bucketed-engine vs per-path-loop step time on a '
                          'deep uniform MLP')
+    ap.add_argument('--json', default=None, metavar='PATH',
+                    help='also write the emitted rows to PATH as JSON '
+                         '(CI benchmark artifacts)')
     args = ap.parse_args()
     print('name,us_per_call,derived')
     if args.bucketed:
         run_bucketed()
     else:
         run()
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == '__main__':

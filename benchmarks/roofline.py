@@ -5,12 +5,15 @@ bottleneck, MODEL_FLOPS/HLO_FLOPs, memory/device — plus a one-line
 suggestion for moving the dominant term (heuristic from the breakdown).
 Writes results/roofline.md and prints CSV rows.
 
-Also emits the §3.3 sublinear-communication table: per-step curvature
+Also emits the §3.3 sublinear-communication tables: per-step curvature
 (KV/KF) all-reduce volume vs the gradient all-reduce volume, analytically
 from the model's parameter/precon-path specs — Eva's KV vectors are O(d)
 per layer against the O(d²) gradients (the paper's claim), K-FAC's factors
-are O(d²) (same order as gradients), and the refresh runtime's ownership
-exchange adds the cached-inverse volume amortized by the refresh interval.
+are O(d²) (same order as gradients) — plus, since the unified comm layer
+(``repro.comm``), the per-call-site exchange bytes under each codec
+(f32/bf16/int8) and the refresh-exchange comparison of the legacy
+full-stack psum vs the owned-slice all-gather at W=4, all pulled from the
+``repro.comm.metrics`` counters the runtime itself records.
 """
 from __future__ import annotations
 
@@ -23,6 +26,7 @@ DRYRUN_DIR = Path('results/dryrun')
 
 KVCOMM_ARCHES = ['qwen2-0.5b', 'glm4-9b']
 OWNERSHIP_INTERVAL = 10  # refresh interval amortizing the exchange volume
+REFRESH_WORLD = 4        # data-parallel world for the refresh-exchange row
 
 
 def _suggest(rec: dict) -> str:
@@ -47,53 +51,120 @@ def load_records() -> list[dict]:
     return recs
 
 
-def kv_comm_rows() -> list[str]:
-    """§3.3 per-step all-reduce volumes (bytes, f32) for each arch:
-    gradients vs Eva KVs vs K-FAC factors vs the ownership exchange."""
+def _arch_comm_trees(arch: str):
+    """(plan, grads_tree, kv_tree, kf_tree, inverse_stacks) as
+    ShapeDtypeStructs — everything the comm tables need, no arrays."""
+    import jax
+    import jax.numpy as jnp
+
     from repro.configs.registry import get_config
+    from repro.core import bucketing
     from repro.models import build_model
     from repro.models import module as M
 
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    specs = M.flatten_specs(model.param_specs())
+    precon = sorted(set(model.precon_paths()) & set(specs))
+    f32 = jnp.float32
+    grads = {p: jax.ShapeDtypeStruct(s.shape, f32) for p, s in specs.items()}
+    kv, kf = {}, {}
+    for p in precon:
+        shape = specs[p].shape
+        lead, d_in, d_out = shape[:-2], shape[-2], shape[-1]
+        kv[p] = (jax.ShapeDtypeStruct(lead + (d_in,), f32),
+                 jax.ShapeDtypeStruct(lead + (d_out,), f32))
+        kf[p] = (jax.ShapeDtypeStruct(lead + (d_in, d_in), f32),
+                 jax.ShapeDtypeStruct(lead + (d_out, d_out), f32))
+    from repro.comm.exchange import slice_stack_specs
+
+    plan = bucketing.build_plan({p: specs[p] for p in precon})
+    return plan, grads, kv, kf, slice_stack_specs(plan, 'both')
+
+
+def kv_comm_rows() -> list[str]:
+    """§3.3 exchange-volume tables, per arch: the classic KV-vs-gradient
+    comparison, the per-call-site × codec matrix, and the refresh-exchange
+    psum-vs-owned-slice row — the codec'd numbers come from the same
+    ``repro.comm`` accounting the runtime records at trace time."""
+    from repro.comm import exchange as ex
+    from repro.comm import get_codec, metrics
+    from repro.schedule import ownership
+
+    mb = 1 / 2 ** 20
+    codecs = ['f32', 'bf16', 'int8']
     lines = ['',
              '## KV vs gradient all-reduce volume per step (§3.3)',
              '',
              '| arch | grad MB | eva_kv MB | kv/grad | kfac_kf MB | kf/grad '
-             f'| ownership_exchange MB (@k={OWNERSHIP_INTERVAL}) |',
+             f'| refresh_exchange MB (@k={OWNERSHIP_INTERVAL}, owned-slice, '
+             f'W={REFRESH_WORLD}) |',
              '|---|---|---|---|---|---|---|']
+    site_lines = ['',
+                  '## Per-call-site exchange bytes × codec (repro.comm)',
+                  '',
+                  '| arch | call-site | ' +
+                  ' | '.join(f'{c} MB' for c in codecs) + ' |',
+                  '|---|---|---|---|---|']
+    refresh_lines = ['',
+                     f'## Refresh exchange: full-stack psum vs owned-slice '
+                     f'all-gather (W={REFRESH_WORLD})',
+                     '',
+                     '| arch | psum MB | gather f32 MB | reduction | '
+                     'gather int8 MB | reduction |',
+                     '|---|---|---|---|---|---|']
     for arch in KVCOMM_ARCHES:
-        cfg = get_config(arch)
-        model = build_model(cfg)
-        specs = M.flatten_specs(model.param_specs())
-        precon = sorted(set(model.precon_paths()) & set(specs))
-        n_params = sum(int(_prod(s.shape)) for s in specs.values())
-        grad_b = 4 * n_params
-        kv_b = kf_b = 0
-        for p in precon:
-            shape = specs[p].shape
-            lead = _prod(shape[:-2])
-            d_in, d_out = shape[-2], shape[-1]
-            kv_b += 4 * lead * (d_in + d_out)          # ā, b̄ vectors
-            kf_b += 4 * lead * (d_in ** 2 + d_out ** 2)  # AAᵀ, BBᵀ factors
-        # the worker-sharded refresh exchanges the cached inverses (same
-        # volume as the factors) once per refresh — amortize by the interval
-        own_b = kf_b / OWNERSHIP_INTERVAL
-        mb = 1 / 2 ** 20
+        plan, grads, kv, kf, stacks = _arch_comm_trees(arch)
+        owners = ownership.assign_slice_owners(
+            plan, ownership.inverse_cost('both'), REFRESH_WORLD)
+        # record through the comm metrics counters (the same accounting the
+        # trainer logs), then read the table back out of the snapshot
+        for site, tree in (('grads/dp', grads), ('stats/eva_kv', kv),
+                           ('stats/kfac_kf', kf)):
+            for c in codecs:
+                metrics.record(f'{arch}/{site}/{c}',
+                               bytes_per_call=ex.tree_payload_bytes(
+                                   tree, get_codec(c)),
+                               codec=c, mode='allreduce')
+        for mode, c in (('psum', 'f32'), ('gather', 'f32'),
+                        ('gather', 'int8')):
+            metrics.record(
+                f'{arch}/refresh/{mode}/{c}',
+                bytes_per_call=ex.refresh_exchange_bytes(
+                    plan, owners, stacks, REFRESH_WORLD, codec=c, mode=mode),
+                codec=c, mode=mode)
+        snap = metrics.snapshot()
+
+        def b_of(site, c='f32', snap=snap, arch=arch):
+            return snap[f'{arch}/{site}/{c}']['bytes_per_call']
+
+        grad_b, kv_b, kf_b = (b_of('grads/dp'), b_of('stats/eva_kv'),
+                              b_of('stats/kfac_kf'))
+        ag_b = b_of('refresh/gather')
+        ag_i8 = b_of('refresh/gather', 'int8')
+        ps_b = b_of('refresh/psum')
         lines.append(
             f'| {arch} | {grad_b * mb:.1f} | {kv_b * mb:.3f} '
             f'| {kv_b / grad_b:.2e} | {kf_b * mb:.1f} | {kf_b / grad_b:.2f} '
-            f'| {own_b * mb:.1f} |')
+            f'| {ag_b / OWNERSHIP_INTERVAL * mb:.1f} |')
+        for site in ('grads/dp', 'stats/eva_kv', 'stats/kfac_kf'):
+            site_lines.append(
+                f'| {arch} | {site} | ' +
+                ' | '.join(f'{b_of(site, c) * mb:.3f}' for c in codecs) +
+                ' |')
+        refresh_lines.append(
+            f'| {arch} | {ps_b * mb:.1f} | {ag_b * mb:.1f} '
+            f'| {ps_b / ag_b:.2f}x | {ag_i8 * mb:.1f} '
+            f'| {ps_b / ag_i8:.2f}x |')
         emit(f'roofline/kvcomm/{arch}', 0.0,
              f'kv_over_grad={kv_b / grad_b:.2e};kf_over_grad='
              f'{kf_b / grad_b:.2f};grad_mb={grad_b * mb:.1f};'
-             f'ownership_mb_per_step={own_b * mb:.2f}')
-    return lines
-
-
-def _prod(xs) -> int:
-    out = 1
-    for x in xs:
-        out *= int(x)
-    return out
+             f'refresh_mb_per_step={ag_b / OWNERSHIP_INTERVAL * mb:.2f}')
+        emit(f'roofline/refresh_exchange/{arch}', 0.0,
+             f'psum_mb={ps_b * mb:.1f};gather_mb={ag_b * mb:.1f};'
+             f'reduction={ps_b / ag_b:.2f}x;int8_mb={ag_i8 * mb:.1f};'
+             f'int8_reduction={ps_b / ag_i8:.2f}x;world={REFRESH_WORLD}')
+    return lines + site_lines + refresh_lines
 
 
 def run() -> None:

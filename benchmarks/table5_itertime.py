@@ -18,8 +18,10 @@ bucket), with the launch counts that explain the gap.
 ``--refresh-sharding`` isolates the curvature *refresh* stage (K-FAC damped
 inverses for the same 24-layer config) under a W=4 host-device data mesh:
 every-worker-redundant recomputation (the pre-runtime behavior) vs
-worker-sharded ownership + psum exchange (``repro.schedule``) — the
-1/W-inverse-FLOPs cell.
+worker-sharded ownership with the owned-slice gather exchange (default)
+and the legacy full-stack psum — plus the exchanged-bytes-per-refresh
+table for psum vs gather × codec (identity/bf16/int8), the ROADMAP
+"Refresh-exchange volume" numbers.
 """
 from __future__ import annotations
 
@@ -37,7 +39,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn, tree_bytes
+from benchmarks.common import emit, time_fn, tree_bytes, write_json
 from repro.configs.base import ArchConfig
 from repro.configs.registry import demo_lm
 from repro.core import bucketing
@@ -140,11 +142,15 @@ def run_bucketed(method: str = 'eva') -> None:
 def run_refresh_sharding() -> None:
     """K-FAC inverse refresh for the 24-layer bench config on a (4,)-'data'
     host mesh: redundant (every worker inverts every bucket item) vs
-    worker-sharded (each worker inverts only its owned slices, psum
-    exchange).  Wall time includes the exchange, so the printed speedup is
-    the end-to-end refresh win, not just the FLOP ratio."""
+    worker-sharded (each worker inverts only its owned slices) under both
+    exchange modes (owned-slice gather / full-stack psum).  Wall time
+    includes the exchange, so the printed speedup is the end-to-end
+    refresh win, not just the FLOP ratio; the bytes table quantifies the
+    wire volume each mode × codec moves."""
     from jax.sharding import PartitionSpec as P
 
+    from repro.comm import exchange
+    from repro.comm.exchange import ExchangeConfig
     from repro.core.precondition import kfac_pi_damping
     from repro.schedule import ownership
     from repro.schedule import runtime as schedrt
@@ -182,32 +188,57 @@ def run_refresh_sharding() -> None:
         return (jnp.linalg.inv(ao + gamma_r[..., None, None] * eye_a),
                 jnp.linalg.inv(bo + gamma_q[..., None, None] * eye_b))
 
-    n_items = sum(len(b.paths) for b in plan.buckets)
     if jax.device_count() < 2:
         raise SystemExit('refresh-sharding cell needs multiple host devices '
                          f'(got {jax.device_count()}; check XLA_FLAGS)')
     mesh = compat.make_mesh((jax.device_count(),), ('data',))
 
-    def refresh(shard):
+    def refresh(shard, comm=None):
         def body(s, o):
             return schedrt.sharded_refresh(
                 plan, jnp.asarray(True), one, s, o,
-                cost=ownership.inverse_cost('both'), shard=shard)
+                cost=ownership.inverse_cost('both'), shard=shard, comm=comm)
         return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(P(), P()),
                                         out_specs=P(), check=False))
 
     t_red = time_fn(refresh(False), stats, old)
-    t_shard = time_fn(refresh(True), stats, old)
+    t_shard = time_fn(refresh(True), stats, old)           # default: gather
+    t_psum = time_fn(refresh(True, comm=ExchangeConfig(exchange='psum')),
+                     stats, old)
     world = jax.device_count()
+    n_slices = sum(len(b.paths) * ownership.lead_size(b)
+                   for b in plan.buckets)
     emit(f'table5/refresh/{cfg.name}/redundant_w{world}', t_red,
-         f'items_per_worker={n_items}')
+         f'slices_per_worker={n_slices}')
     per_worker = {w: 0 for w in range(world)}
-    for owns in ownership.describe_ownership(plan, world).values():
-        for w in owns:
-            per_worker[w] += 1
+    for counts in ownership.describe_ownership(plan, world).values():
+        for w, c in enumerate(counts):
+            per_worker[w] += c
     emit(f'table5/refresh/{cfg.name}/sharded_w{world}', t_shard,
-         f'items_per_worker={max(per_worker.values())};'
+         f'slices_per_worker={max(per_worker.values())};'
          f'speedup={t_red / max(t_shard, 1e-9):.2f}x')
+    emit(f'table5/refresh/{cfg.name}/sharded_psum_w{world}', t_psum,
+         f'slices_per_worker={max(per_worker.values())};'
+         f'speedup={t_red / max(t_psum, 1e-9):.2f}x')
+
+    # --- exchange bytes per refresh: psum vs gather × codec (the ROADMAP
+    # "Refresh-exchange volume" numbers; logical per-worker bytes from the
+    # same repro.comm accounting the runtime records at trace time) ---
+    owners = ownership.assign_slice_owners(plan,
+                                           ownership.inverse_cost('both'),
+                                           world)
+    inv_stacks = exchange.slice_stack_specs(plan, 'both')
+    psum_b = exchange.refresh_exchange_bytes(plan, owners, inv_stacks, world,
+                                             mode='psum')
+    emit(f'table5/refresh_bytes/{cfg.name}/psum_w{world}', 0.0,
+         f'bytes_per_refresh={psum_b}')
+    for codec in ('identity', 'bf16', 'int8'):
+        g_b = exchange.refresh_exchange_bytes(plan, owners, inv_stacks,
+                                              world, codec=codec,
+                                              mode='gather')
+        emit(f'table5/refresh_bytes/{cfg.name}/gather_{codec}_w{world}', 0.0,
+             f'bytes_per_refresh={g_b};'
+             f'reduction_vs_psum={psum_b / g_b:.2f}x')
 
 
 def run() -> None:
@@ -253,6 +284,9 @@ def main() -> None:
     ap.add_argument('--refresh-sharding', action='store_true',
                     help='only the worker-sharded curvature-refresh cell '
                          '(4 host devices, K-FAC inverses)')
+    ap.add_argument('--json', default=None, metavar='PATH',
+                    help='also write the emitted rows to PATH as JSON '
+                         '(CI benchmark artifacts)')
     args = ap.parse_args()
     print('name,us_per_call,derived')
     if args.bucketed:
@@ -261,6 +295,8 @@ def main() -> None:
         run_refresh_sharding()
     else:
         run()
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,20 @@
+"""Unified communication codec layer (Eva §3.3 distributed story).
+
+One exchange path for gradients, KV/KF statistics, and owned-slice
+curvature refresh: pluggable pytree codecs (``codec``), the collective
+primitives that wire them into shard_map bodies (``exchange``), and
+per-call-site logical byte accounting (``metrics``).
+"""
+from repro.comm import metrics
+from repro.comm.codec import BF16, CODECS, F32, INT8_EF, Codec, get_codec
+from repro.comm.exchange import (ExchangeConfig, allgather_owned_slices,
+                                 allreduce_mean_leaf, allreduce_mean_tree,
+                                 from_extras, refresh_exchange_bytes,
+                                 slice_stack_specs, tree_payload_bytes)
+
+__all__ = [
+    'BF16', 'CODECS', 'F32', 'INT8_EF', 'Codec', 'get_codec',
+    'ExchangeConfig', 'allgather_owned_slices', 'allreduce_mean_leaf',
+    'allreduce_mean_tree', 'from_extras', 'refresh_exchange_bytes',
+    'slice_stack_specs', 'tree_payload_bytes', 'metrics',
+]

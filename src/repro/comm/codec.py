@@ -1,0 +1,126 @@
+"""Pluggable pytree codecs for cross-device exchange.
+
+Every cross-device exchange in this repo (gradient all-reduce, KV/KF
+statistics reduction, owned-slice curvature refresh) moves f32 pytrees.
+A :class:`Codec` is a pure encode/decode pair over single leaves that the
+exchange primitives (``repro.comm.exchange``) lift to pytrees and wire into
+the collectives — safe under ``jit`` and ``shard_map`` because every method
+is a pure jax function of its inputs.
+
+Three codecs ship:
+
+* ``f32`` (alias ``identity``) — pass-through (the exact legacy wire
+  format; reductions stay the historical ``lax.pmean``/``lax.psum`` ops so
+  atol=0 contracts hold);
+* ``bf16`` — truncate to bfloat16 on the wire, accumulate in f32 (2× less
+  traffic; round-trips exactly where the value is bf16-representable;
+  carries the truncation residual as error feedback on the gradient
+  all-reduce, like int8);
+* ``int8`` — symmetric max-scale int8 quantization (8× less traffic) with
+  an optional carried error-feedback residual (Karimireddy et al.-style
+  EF-SGD, used by the gradient all-reduce so convergence is intact) and a
+  saturation-count diagnostic (elements that would exceed ±127 before
+  clipping — zero by construction when the scale is derived from the true
+  global max, nonzero only if a caller feeds a stale/underestimated max).
+
+MKOR (PAPERS.md) is the precedent for Kronecker-factor state tolerating
+reduced-precision communication; Eva §3.3 is the sublinear-traffic story
+this layer generalizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# The int8 scale clamp: keeps all-zero (or denormal) tensors from dividing
+# by zero; because the clamp only ever *raises* the scale above |x|max/127,
+# it can never introduce saturation.
+SCALE_FLOOR = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """A leaf-wise wire format.
+
+    Attributes:
+      name: registry key ('f32' | 'bf16' | 'int8').
+      wire_bits: logical payload bits per element on the wire (the byte
+        accounting in ``repro.comm.metrics`` is derived from this).
+      error_feedback: whether the exchange should carry the quantization
+        residual between calls (gradient all-reduce); codecs without it
+        leave the caller's residual tree untouched.
+      passthrough: the encoded payload *is* the value — exchanges may keep
+        their exact legacy reduction ops (bit-identity contracts).
+      sum_dtype: accumulate psums of the payload in this dtype (int8 sums
+        exactly in int32, like the historical ``quantize_allreduce``);
+        None sums decoded f32 values.
+    """
+
+    name: str
+    wire_bits: int
+    error_feedback: bool = False
+    passthrough: bool = False
+    sum_dtype: Optional[Any] = None
+
+    @property
+    def has_scale(self) -> bool:
+        return self.name == 'int8'
+
+    # -- leaf ops (pure; shapes broadcast: amax/scale may be scalar or
+    #    per-item keepdims) ---------------------------------------------------
+
+    def encode(self, x: jnp.ndarray, amax: jnp.ndarray
+               ) -> tuple[jnp.ndarray, Optional[jnp.ndarray], jnp.ndarray]:
+        """``x (f32, residual already folded in) -> (payload, scale, n_sat)``.
+
+        ``amax`` is max|x| over whatever scope the scale is shared across
+        (globally pmax'd for all-reduce, per stack item for owned-slice
+        gather).  ``n_sat`` counts elements whose quantized magnitude
+        exceeded the representable range before clipping (f32 scalar).
+        """
+        if self.name == 'f32':
+            return x, None, jnp.zeros((), jnp.float32)
+        if self.name == 'bf16':
+            return x.astype(jnp.bfloat16), None, jnp.zeros((), jnp.float32)
+        scale = jnp.maximum(amax / 127.0, SCALE_FLOOR)
+        r = jnp.round(x / scale)
+        n_sat = jnp.sum(jnp.abs(r) > 127.0).astype(jnp.float32)
+        q = jnp.clip(r, -127, 127).astype(jnp.int8)
+        return q, scale, n_sat
+
+    def decode(self, payload: jnp.ndarray,
+               scale: Optional[jnp.ndarray]) -> jnp.ndarray:
+        """Wire payload (or its exact integer sum) back to f32."""
+        if self.name == 'int8':
+            return payload.astype(jnp.float32) * scale
+        return payload.astype(jnp.float32)
+
+    def init_err(self, tree: Any) -> Optional[Any]:
+        """Zero residual tree for error-feedback codecs, else None."""
+        if not self.error_feedback:
+            return None
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.float32), tree)
+
+
+F32 = Codec(name='f32', wire_bits=32, passthrough=True)
+BF16 = Codec(name='bf16', wire_bits=16, error_feedback=True)
+INT8_EF = Codec(name='int8', wire_bits=8, error_feedback=True,
+                sum_dtype=jnp.int32)
+
+CODECS: dict[str, Codec] = {c.name: c for c in (F32, BF16, INT8_EF)}
+CODECS['identity'] = F32          # the ISSUE-facing name for pass-through
+
+
+def get_codec(spec: Any) -> Codec:
+    """Resolve a codec name or instance; ``None`` means pass-through f32."""
+    if spec is None:
+        return F32
+    if isinstance(spec, Codec):
+        return spec
+    if spec not in CODECS:
+        raise KeyError(f'unknown codec {spec!r}; have {sorted(CODECS)}')
+    return CODECS[spec]

@@ -1,0 +1,420 @@
+"""Codec-aware exchange primitives: the ONE place collectives happen.
+
+Before this module the repo had three independent cross-device exchange
+paths — the int8+EF gradient all-reduce in ``train/compression.py``, the
+uncompressed KV/KF ``pmean_stats`` in ``sharding/constraints.py``, and the
+full-stack zero-padded psum inverse exchange in
+``schedule/runtime.sharded_refresh`` — each reimplementing quantize /
+reduce / dequantize or padding logic.  Both generic primitives here are
+pure, jit- and shard_map-safe, codec-pluggable (``repro.comm.codec``) and
+account their logical traffic per call site (``repro.comm.metrics``):
+
+* :func:`allreduce_mean_tree` — mean all-reduce of a pytree over the live
+  data-parallel axes, optionally quantized with a carried error-feedback
+  residual.  With the int8 codec it reproduces the historical
+  ``quantize_allreduce`` op sequence exactly (global pmax scale, int32
+  exact-sum, shared-scale dequant).
+
+* :func:`allgather_owned_slices` — the owned-slice curvature-refresh
+  exchange.  Each worker contributes only the stack rows it owns (a padded
+  static-shape all-gather keyed off the deterministic
+  ``ownership.assign_slice_owners`` map) instead of psum-ing the whole
+  zero-padded stack, so per-worker refresh traffic scales ~1/W with world
+  size.  With the f32 codec the reconstruction is bit-exact: every row is
+  an exact copy of its owner's computed value — the same value the psum of
+  zero-padded slices reconstructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import metrics
+from repro.comm.codec import Codec, get_codec
+# safe at top level: constraints imports repro.comm only lazily (inside
+# pmean_stats), so there is no import cycle
+from repro.sharding.constraints import data_axes_in_scope
+
+
+# ---------------------------------------------------------------------------
+# Train-level exchange configuration (threaded through ``Extras.comm``)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeConfig:
+    """Which codec each call-site family uses (static, not a pytree).
+
+    Attributes:
+      grads: gradient all-reduce codec (the explicit-DP engine; error
+        feedback applies here).
+      stats: KV/KF statistics reduction codec (``pmean_stats`` — consumed
+        by the K-FAC/FOOF ``a_outer``/``b_outer`` reduction; 'f32' keeps
+        the exact legacy ``lax.pmean``).
+      codec: owned-slice curvature-refresh exchange codec
+        ('identity'/'f32' | 'bf16' | 'int8').
+      exchange: 'gather' (owned slices, ~1/W traffic, the default) or
+        'psum' (the legacy full-stack zero-padded exchange, kept for A/B
+        benchmarks and equivalence tests).
+      topology: 'flat' treats the data-parallel axes as one world;
+        'pod' keeps every bucket's slices inside ONE pod (ownership
+        pod-local), gathers them over the intra-pod axis (ICI) and crosses
+        the pod axis (DCN) once with the reconstructed bucket — only
+        meaningful when both ('pod','data') axes are live, silently flat
+        otherwise.
+    """
+
+    grads: Any = 'int8'
+    stats: Any = 'f32'
+    codec: Any = 'f32'
+    exchange: str = 'gather'
+    topology: str = 'flat'
+
+    def __post_init__(self):
+        if self.exchange not in ('gather', 'psum'):
+            raise ValueError("exchange must be 'gather' or 'psum', "
+                             f'got {self.exchange!r}')
+        if self.topology not in ('flat', 'pod'):
+            raise ValueError("topology must be 'flat' or 'pod', "
+                             f'got {self.topology!r}')
+
+
+_DEFAULT = ExchangeConfig()
+
+
+def from_extras(extras) -> ExchangeConfig:
+    """The exchange config threaded through ``Extras.comm`` (next to the
+    bucket plan and the refresh runtime), or the default config."""
+    cfg = getattr(extras, 'comm', None) if extras is not None else None
+    return cfg if cfg is not None else _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# Axis helpers
+
+
+def _axis_arg(axes: Sequence[str]):
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def _all_gather(x: jnp.ndarray, axes: Sequence[str], world: int) -> jnp.ndarray:
+    """Gather ``x`` from every worker: (world, *x.shape), leading index =
+    the row-major rank over ``axes`` (matching ``ownership.world_and_rank``).
+    Gathering the minor axis first makes the reshape row-major."""
+    g = x
+    for ax in reversed(tuple(axes)):
+        g = jax.lax.all_gather(g, ax)
+    return g.reshape((world,) + x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (shapes are static under jit — exact and free at run time)
+
+
+def leaf_payload_bytes(leaf, codec: Codec, scale_elems: int = 1) -> int:
+    """Logical bytes one worker contributes for one leaf: payload +
+    the f32 scale side-channel for scaled codecs."""
+    n = metrics.leaf_elements(leaf)
+    payload = (n * codec.wire_bits + 7) // 8
+    return payload + (4 * scale_elems if codec.has_scale else 0)
+
+
+def tree_payload_bytes(tree, codec: Codec, scale_elems: int = 1) -> int:
+    return sum(leaf_payload_bytes(l, codec, scale_elems)
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Mean all-reduce
+
+
+def allreduce_mean_leaf(g: jnp.ndarray, err: Optional[jnp.ndarray], *,
+                        codec: Any, axes: Sequence[str]
+                        ) -> tuple[jnp.ndarray, Optional[jnp.ndarray],
+                                   jnp.ndarray]:
+    """Codec'd mean all-reduce of one leaf over ``axes``.
+
+    Returns ``(mean, new_err, n_sat)``.  With the int8 codec this is the
+    exact historical ``quantize_allreduce`` op sequence: fold in the
+    residual, one scalar pmax for the shared scale, int8 quantize, exact
+    int32-accumulate psum, shared-scale dequantize, divide by world size.
+    Non-error-feedback codecs return ``err`` unchanged.  With no live axes
+    the leaf still round-trips through the codec (a W=1 collective), so
+    single-device behavior is the W=1 special case of the same path.
+    """
+    c = get_codec(codec)
+    axes = tuple(axes)
+    x = g.astype(jnp.float32)
+    if c.error_feedback and err is not None:
+        x = x + err
+    if c.passthrough:
+        mean = jax.lax.pmean(x, _axis_arg(axes)) if axes else x
+        return mean, err, jnp.zeros((), jnp.float32)
+    amax = None
+    if c.has_scale:
+        # only scaled codecs consume the max; bf16 must not pay the O(n)
+        # reduction + blocking pmax it would then ignore
+        amax = jnp.max(jnp.abs(x))
+        if axes:
+            amax = jax.lax.pmax(amax, _axis_arg(axes))
+    payload, scale, n_sat = c.encode(x, amax)
+    new_err = err
+    if c.error_feedback:
+        new_err = x - c.decode(payload, scale)
+    if not axes:
+        return c.decode(payload, scale), new_err, n_sat
+    # divisor is a runtime psum-of-ones, NOT the trace-time axis-env probe
+    # (compat.bound_axis_sizes): the probe is best-effort and a
+    # false-negative there must not silently turn the mean into a
+    # W×-too-large sum (the historical quantize_allreduce computed n
+    # exactly this way)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), _axis_arg(axes))
+    if c.sum_dtype is not None:
+        total = jax.lax.psum(payload.astype(c.sum_dtype), _axis_arg(axes))
+        mean = c.decode(total, scale) / n
+    else:
+        total = jax.lax.psum(c.decode(payload, scale), _axis_arg(axes))
+        mean = total / n
+    return mean, new_err, n_sat
+
+
+def allreduce_mean_tree(tree: Any, err: Optional[Any] = None, *,
+                        codec: Any = 'f32',
+                        axes: Optional[Sequence[str]] = None,
+                        site: Optional[str] = None
+                        ) -> tuple[Any, Optional[Any], dict]:
+    """Mean all-reduce of a pytree; see :func:`allreduce_mean_leaf`.
+
+    Returns ``(mean_tree, new_err_tree, info)`` where ``info['saturation']``
+    is the global fraction of saturated elements (psum'd over workers so
+    any worker's overflow is visible everywhere; 0.0 by construction when
+    the scale comes from the true global max).
+    """
+    c = get_codec(codec)
+    if axes is None:
+        axes = data_axes_in_scope()
+    axes = tuple(axes)
+    zero = jnp.zeros((), jnp.float32)
+    if tree is None:
+        return None, err, {'saturation': zero}
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    err_leaves = (jax.tree_util.tree_leaves(err) if err is not None
+                  else [None] * len(leaves))
+    means, new_errs, sat, elems = [], [], zero, 0
+    for g, e in zip(leaves, err_leaves):
+        m, ne, ns = allreduce_mean_leaf(g, e, codec=c, axes=axes)
+        means.append(m)
+        new_errs.append(ne)
+        sat = sat + ns
+        elems += metrics.leaf_elements(g)
+    if axes:
+        # both the saturation count and the worker count come from runtime
+        # psums — NOT the best-effort axis-env probe, whose false-negative
+        # would inflate the reported fraction W×
+        sat = jax.lax.psum(sat, _axis_arg(axes))
+        n_workers = jax.lax.psum(jnp.ones((), jnp.float32), _axis_arg(axes))
+    else:
+        n_workers = jnp.ones((), jnp.float32)
+    sat_frac = sat / (max(elems, 1) * n_workers)
+    if site is not None:
+        metrics.record(site, bytes_per_call=tree_payload_bytes(leaves, c),
+                       codec=c.name, mode='allreduce')
+    new_err = (jax.tree_util.tree_unflatten(treedef, new_errs)
+               if err is not None else None)
+    return (jax.tree_util.tree_unflatten(treedef, means), new_err,
+            {'saturation': sat_frac})
+
+
+# ---------------------------------------------------------------------------
+# Owned-slice refresh exchange
+
+
+@functools.lru_cache(maxsize=1024)
+def _gather_maps(owner: tuple, world: int) -> tuple:
+    """Static index maps for one bucket's owned-slice exchange.
+
+    Returns ``(send_idx (world, M), src_idx (N,), M)``: worker ``w`` sends
+    the stack rows ``send_idx[w]`` (its owned items, padded by repetition
+    to the max per-worker count M so the all-gather is static-shape), and
+    row ``i`` of the full stack is recovered from flat gather position
+    ``src_idx[i] = owner_i * M + rank_of_i_within_owner``.
+    """
+    n = len(owner)
+    mine = {w: [i for i in range(n) if owner[i] == w] for w in range(world)}
+    m = max(1, max(len(v) for v in mine.values()))
+    send = np.zeros((world, m), np.int32)
+    for w in range(world):
+        for j in range(m):
+            send[w, j] = mine[w][j % len(mine[w])] if mine[w] else 0
+    src = np.zeros(n, np.int32)
+    for w in range(world):
+        for j, i in enumerate(mine[w]):
+            src[i] = w * m + j
+    return send, src, m
+
+
+def owned_slice_bytes(stack_tree: Any, owner, world: int,
+                      codec: Codec) -> int:
+    """Logical bytes one worker contributes to the owned-slice all-gather
+    of one bucket's stacked tree (leaves shaped (N, ...)): only its padded
+    M owned rows travel, plus a per-row f32 scale for scaled codecs."""
+    _, _, m = _gather_maps(tuple(int(w) for w in owner), world)
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(stack_tree):
+        n_items = int(leaf.shape[0])
+        per_row = metrics.leaf_elements(leaf) // max(n_items, 1)
+        total += (m * per_row * codec.wire_bits + 7) // 8
+        if codec.has_scale:
+            total += 4 * m
+    return total
+
+
+def allgather_owned_slices(plan, owners: dict, world: int, rank,
+                           stacks: dict, *, codec: Any = 'f32',
+                           axes: Optional[Sequence[str]] = None,
+                           site: Optional[str] = None,
+                           pods: Optional[tuple[int, int]] = None) -> dict:
+    """Reconstruct full bucket stacks from per-owner slices.
+
+    Args:
+      plan: the ``BucketPlan`` whose stacked values are being exchanged.
+      owners: ``{bucket_key: (N,) owner ranks}`` from
+        ``ownership.assign_slice_owners`` (or ``assign_pod_slice_owners``
+        with ``pods=``) — static numpy, deterministic on every host, which
+        is what makes the index maps SPMD-consistent; N must match the
+        stacks' leading axis.
+      world / rank: from ``ownership.world_and_rank`` (world static, rank a
+        traced scalar).
+      stacks: ``{bucket_key: pytree of (N, *item) arrays}`` where each
+        worker holds real values at its owned rows (anything elsewhere —
+        the cond-gated zeros are never read).
+      codec: wire format; int8 uses one symmetric max-scale per stack row
+        (each row has exactly one producer, so no global pmax is needed).
+      pods: ``(n_pods, per_pod)`` for the topology-aware two-stage
+        exchange: ``owners`` must be pod-local
+        (``ownership.assign_pod_slice_owners``) and ``axes`` must be the
+        ('pod', intra-pod) pair.  The slice gather then runs over the
+        intra-pod axis only (ICI); the owning pod's reconstructed bucket
+        crosses the pod axis (DCN) once as a zero-padded psum (exact, like
+        the legacy exchange — but coarse-grained and pod-axis-only).
+
+    Returns stacks of identical structure with every row holding its
+    owner's value on every worker.
+    """
+    c = get_codec(codec)
+    if axes is None:
+        axes = data_axes_in_scope()
+    axes = tuple(axes)
+    two_stage = (pods is not None and len(axes) == 2 and pods[0] > 1
+                 and pods[0] * pods[1] == world)
+    out = {}
+    nbytes = ici = dcn = 0
+    for b in plan.buckets:
+        owner = tuple(int(w) for w in owners[b.key])
+        if two_stage:
+            n_pods, per_pod = pods
+            bucket_pod = owner[0] // per_pod
+            assert all(w // per_pod == bucket_pod for w in owner), \
+                f'bucket {b.key}: owners {owner} span pods (need pod-local)'
+            send_np, src_np, _ = _gather_maps(
+                tuple(w - bucket_pod * per_pod for w in owner), per_pod)
+            rows = jnp.take(jnp.asarray(send_np), rank % per_pod, axis=0)
+        else:
+            send_np, src_np, _ = _gather_maps(owner, world)
+            rows = jnp.take(jnp.asarray(send_np), rank, axis=0)   # (M,)
+        src = jnp.asarray(src_np)                                 # (N,)
+
+        def leaf(x, rows=rows, src=src, owner=owner):
+            local = jnp.take(x, rows, axis=0).astype(jnp.float32)
+            red = tuple(range(1, local.ndim))
+            amax = jnp.max(jnp.abs(local), axis=red, keepdims=True) \
+                if red else jnp.abs(local)
+            payload, scale, _ = c.encode(local, amax)
+            if two_stage:
+                n_pods, per_pod = pods
+                g_p = _all_gather(payload, axes[1:], per_pod)
+                g_s = (_all_gather(scale, axes[1:], per_pod)
+                       if scale is not None else None)
+                vals = c.decode(g_p, g_s)
+                flat = vals.reshape((per_pod * local.shape[0],) + x.shape[1:])
+                recon = jnp.take(flat, src, axis=0)
+                # stage 2: only the owning pod's reconstruction is real;
+                # zero elsewhere and psum over the pod axis (x+0 exact)
+                my_pod = rank // per_pod
+                recon = jnp.where(my_pod == owner[0] // per_pod, recon,
+                                  jnp.zeros_like(recon))
+                return jax.lax.psum(recon, axes[0]).astype(x.dtype)
+            g_p = _all_gather(payload, axes, world)               # (W, M, ...)
+            g_s = _all_gather(scale, axes, world) if scale is not None else None
+            vals = c.decode(g_p, g_s)
+            flat = vals.reshape((world * local.shape[0],) + x.shape[1:])
+            return jnp.take(flat, src, axis=0).astype(x.dtype)
+
+        out[b.key] = jax.tree_util.tree_map(leaf, stacks[b.key])
+        if two_stage:
+            local_owner = np.asarray(owner) % pods[1]
+            ici += owned_slice_bytes(stacks[b.key], local_owner, pods[1], c)
+            # the pod-axis psum carries the full reconstructed bucket in f32
+            dcn += sum(4 * metrics.leaf_elements(l)
+                       for l in jax.tree_util.tree_leaves(stacks[b.key]))
+        else:
+            nbytes += owned_slice_bytes(stacks[b.key], owners[b.key], world, c)
+    if site is not None:
+        if two_stage:
+            metrics.record(site, bytes_per_call=ici + dcn, codec=c.name,
+                           mode='gather-pod',
+                           extra={'world': world, 'pods': list(pods),
+                                  'ici_bytes': ici, 'dcn_bytes': dcn})
+        else:
+            metrics.record(site, bytes_per_call=nbytes, codec=c.name,
+                           mode='gather', extra={'world': world})
+    return out
+
+
+def refresh_exchange_bytes(plan, owners: dict, stacks: Any, world: int, *,
+                           codec: Any = 'f32', mode: str = 'gather') -> int:
+    """Logical per-worker bytes of ONE refresh exchange — the accounting
+    the runtime records, callable on ShapeDtypeStructs (roofline §3.3).
+
+    'psum' contributes the whole zero-padded stack at f32 regardless of
+    codec (the legacy exchange is uncompressed); 'gather' contributes
+    only the padded owned rows under ``codec``.
+    """
+    if mode == 'psum':
+        return sum(4 * metrics.leaf_elements(l)
+                   for k in stacks
+                   for l in jax.tree_util.tree_leaves(stacks[k]))
+    c = get_codec(codec)
+    return sum(owned_slice_bytes(stacks[b.key], owners[b.key], world, c)
+               for b in plan.buckets)
+
+
+def slice_stack_specs(plan, sides: str = 'both') -> dict:
+    """ShapeDtypeStruct stacks mirroring what ``sharded_refresh`` exchanges
+    for a dense-factor method: per bucket a (N·lead, d_in, d_in) cached
+    inverse (plus the (N·lead, d_out, d_out) pair for ``sides='both'``) in
+    f32.  This encodes the runtime's slice-flattening convention (stack ×
+    leading scan/expert dims → one slice axis) in ONE place for the
+    byte-accounting callers (roofline §3.3, ``table5 --refresh-sharding``,
+    tests) — change it here when the layout in
+    ``schedule/runtime.recompute_sharded`` changes.
+    """
+    # lazy: repro.schedule's package __init__ imports this module, so a
+    # top-level import here would be circular
+    from repro.schedule.ownership import lead_size
+
+    if sides not in ('left', 'both'):
+        raise ValueError(f"sides must be 'left' or 'both', got {sides!r}")
+    out = {}
+    for b in plan.buckets:
+        s = len(b.paths) * lead_size(b)
+        d_in, d_out = b.shape[-2], b.shape[-1]
+        specs = (jax.ShapeDtypeStruct((s, d_in, d_in), jnp.float32),)
+        if sides == 'both':
+            specs += (jax.ShapeDtypeStruct((s, d_out, d_out), jnp.float32),)
+        out[b.key] = specs
+    return out

@@ -1,0 +1,54 @@
+"""Per-call-site logical exchange-byte accounting.
+
+Every exchange primitive in ``repro.comm.exchange`` records, at trace time,
+the logical payload bytes ONE worker contributes to the collective per call
+(wire bits × elements + scale side-channel).  Shapes are static under jit,
+so the numbers are exact and cost nothing at run time; the trainer logs a
+snapshot once the step is traced and ``benchmarks/roofline.py`` uses the
+same counters for the §3.3 table.
+
+"Logical" means payload bytes handed to the collective, before any
+transport-level factor (ring all-reduce moves ~2× the payload; all-gather
+receives W−1 peers' payloads) — the codec/mode win shows up identically in
+either convention.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional
+
+_LOCK = threading.Lock()
+_SITES: dict[str, dict[str, Any]] = {}
+
+
+def record(site: str, *, bytes_per_call: int, codec: str, mode: str,
+           extra: Optional[dict] = None) -> None:
+    """Record one call-site's per-call contributed bytes (trace time)."""
+    with _LOCK:
+        rec = _SITES.setdefault(site, {'traces': 0})
+        rec['traces'] += 1
+        rec['bytes_per_call'] = int(bytes_per_call)
+        rec['codec'] = codec
+        rec['mode'] = mode
+        if extra:
+            rec.update(extra)
+
+
+def snapshot() -> dict[str, dict[str, Any]]:
+    """{site: {bytes_per_call, codec, mode, traces, ...}} — copy, safe to
+    mutate/serialize."""
+    with _LOCK:
+        return {k: dict(v) for k, v in _SITES.items()}
+
+
+def reset() -> None:
+    with _LOCK:
+        _SITES.clear()
+
+
+def leaf_elements(leaf) -> int:
+    """Element count of an array / ShapeDtypeStruct / tracer."""
+    n = 1
+    for d in leaf.shape:
+        n *= int(d)
+    return n

@@ -13,6 +13,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import exchange as comm_exchange
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
@@ -54,11 +55,13 @@ def foof_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
     def update(updates, state: FoofState, params=None, extras: Extras | None = None):
         del params
         rt = schedrt.from_extras(extras)
+        comm = comm_exchange.from_extras(extras)
         pol = rt.resolve(policy, interval)
         flat = kvlib.flatten_params(updates)
         fresh_flat = _extract(extras.stats, fields)
         plan = _stats_plan(flat, fresh_flat, extras)
-        fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
+        fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat),
+                            codec=comm.stats, site='stats/foof')
         stats, running = kvlib.update_running(state.running, fresh, kf_decay)
 
         refresh, staleness = pol.decide(state.sched, stats)
@@ -66,7 +69,8 @@ def foof_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
             plan, refresh, lambda b, m: _damped_inv(m, gamma),
             {k: st.a_outer for k, st in stats.items()},
             dict(state.a_inv),
-            cost=ownership.inverse_cost('left'), shard=rt.shard_refresh)
+            cost=ownership.inverse_cost('left'), shard=rt.shard_refresh,
+            comm=comm, site='refresh/foof')
         sched = schedpol.commit(pol, state.sched, stats, refresh, staleness)
 
         ops = {k: kvlib.LayerStats(a_outer=a_inv[k]) for k in a_inv}

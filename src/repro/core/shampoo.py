@@ -17,6 +17,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import exchange as comm_exchange
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
@@ -85,7 +86,8 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
             plan, refresh, one,
             {k: (m_in[k], m_out[k]) for k in m_in},
             {k: (state.p_in[k], state.p_out[k]) for k in state.p_in},
-            cost=ownership.inverse_cost('both'), shard=rt.shard_refresh)
+            cost=ownership.inverse_cost('both'), shard=rt.shard_refresh,
+            comm=comm_exchange.from_extras(extras), site='refresh/shampoo')
         p_in = {k: v[0] for k, v in new.items()}
         p_out = {k: v[1] for k, v in new.items()}
         sched = schedpol.commit(pol, state.sched, accum, refresh, staleness)

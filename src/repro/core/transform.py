@@ -41,6 +41,11 @@ class Extras:
         refresh runtime threaded next to the plan: default refresh policy
         and the worker-sharded-ownership switch.  Omitting it leaves each
         preconditioner on its own ``policy``/``interval`` arguments.
+      comm: optional ``repro.comm.ExchangeConfig`` — which codec each
+        cross-device exchange family (gradients / statistics / refresh)
+        uses and whether the refresh exchange is the owned-slice
+        all-gather or the legacy full-stack psum.  Omitting it means the
+        defaults (f32 stats/refresh, owned-slice refresh exchange).
     """
 
     raw_grads: Any = None
@@ -49,6 +54,7 @@ class Extras:
     step: Any = None
     plan: Any = None
     sched: Any = None
+    comm: Any = None
 
 
 class GradientTransformation(NamedTuple):

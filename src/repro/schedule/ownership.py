@@ -4,14 +4,20 @@ which bucket item.
 Every worker holding identical (psum-averaged) curvature statistics and
 redundantly inverting every bucket item is exactly the waste distributed
 K-FAC-style layer assignment eliminates (cf. MKOR's distributed factor
-maintenance).  This module assigns each (bucket, item) to one worker of the
-live ``('pod','data')`` mesh — a deterministic, cost-weighted round-robin
-(longest-processing-time greedy over the per-item inverse FLOP estimate
-from the bucket plan) — so refresh FLOPs scale 1/W with world size.  The
-refreshed slices are then exchanged with one bucket-stacked ``psum`` (each
-non-owner contributes zeros, so the sum reconstructs every item bit-exactly:
-``x + 0 == x`` in IEEE arithmetic, which is what makes W-worker refresh
-bit-identical to single-host refresh).
+maintenance).  This module assigns work to the workers of the live
+``('pod','data')`` mesh deterministically at two granularities: per stack
+row (:func:`assign_owners`, the original cost-weighted LPT greedy — no
+production caller since the runtime went slice-granular; kept as the
+simple reference the ownership tests compare against) and per
+(row × lead-dim) slice (:func:`assign_slice_owners`, what the refresh
+runtime shards at; :func:`assign_pod_slice_owners` for pod-local
+topology), so
+refresh FLOPs scale 1/W with world size even on scan-stacked models with
+few parameter paths.  The refreshed slices are then exchanged through
+``repro.comm.exchange`` — by default an owned-slice all-gather whose
+per-worker traffic also scales ~1/W (each slice arrives as an exact copy
+of its owner's value), or the legacy bucket-stacked zero-padded ``psum``
+(``x + 0 == x`` is exact) — both bit-identical reconstructions.
 """
 from __future__ import annotations
 
@@ -60,12 +66,14 @@ def inverse_cost(sides: str = 'both') -> Callable[[Bucket], float]:
 
 
 @functools.lru_cache(maxsize=256)
-def _assign_cached(plan: BucketPlan, costs: tuple, world: int) -> dict:
-    owners = {b.key: np.zeros(len(b.paths), np.int64) for b in plan.buckets}
+def _assign_cached(plan: BucketPlan, costs: tuple, world: int,
+                   counts: tuple) -> dict:
+    owners = {b.key: np.zeros(n, np.int64)
+              for b, n in zip(plan.buckets, counts)}
     if world > 1:
         items = [(costs[bi], b.key, i)
                  for bi, b in enumerate(plan.buckets)
-                 for i in range(len(b.paths))]
+                 for i in range(counts[bi])]
         # LPT greedy = weighted round-robin: biggest items first, each to the
         # least-loaded worker; ties broken by (key, item) so the map is a
         # pure function of (plan, cost, world) on every host.
@@ -81,16 +89,121 @@ def _assign_cached(plan: BucketPlan, costs: tuple, world: int) -> dict:
 def assign_owners(plan: BucketPlan, cost: Callable[[Bucket], float],
                   world: int) -> dict[str, np.ndarray]:
     """{bucket_key: (N,) int array of owner ranks in [0, world)} — static
-    (numpy) metadata, deterministic across hosts."""
+    (numpy) metadata, deterministic across hosts.  One entry per stack ROW
+    (parameter path); the refresh runtime and the exchange accounting use
+    the finer :func:`assign_slice_owners` — this row-level form has no
+    production caller and survives as the reference in the tests."""
     costs = tuple(cost(b) for b in plan.buckets)
-    return _assign_cached(plan, costs, world)
+    counts = tuple(len(b.paths) for b in plan.buckets)
+    return _assign_cached(plan, costs, world, counts)
+
+
+def lead_size(bucket: Bucket) -> int:
+    """Product of a bucket's leading (scan/expert-stack) dims — the number
+    of factor pairs one stack row carries."""
+    lead = 1
+    for d in bucket.shape[:-2]:
+        lead *= int(d)
+    return lead
+
+
+@functools.lru_cache(maxsize=256)
+def _assign_slices_cached(plan: BucketPlan, costs: tuple, world: int,
+                          counts: tuple) -> dict:
+    owners = {b.key: np.zeros(n, np.int64)
+              for b, n in zip(plan.buckets, counts)}
+    if world > 1:
+        order = sorted(range(len(plan.buckets)),
+                       key=lambda bi: (-costs[bi], plan.buckets[bi].key))
+        loads = np.zeros(world, np.float64)
+        for bi in order:
+            key = plan.buckets[bi].key
+            per = np.zeros(world, np.int64)
+            for i in range(counts[bi]):
+                # per-bucket balance first (counts differ by <= 1, which is
+                # what minimizes the padded all-gather), global cost load as
+                # the tie-break; first-min ties keep the map deterministic
+                cand = np.flatnonzero(per == per.min())
+                w = int(cand[np.argmin(loads[cand])])
+                owners[key][i] = w
+                per[w] += 1
+                loads[w] += costs[bi]
+    return owners
+
+
+def assign_slice_owners(plan: BucketPlan, cost: Callable[[Bucket], float],
+                        world: int) -> dict[str, np.ndarray]:
+    """{bucket_key: (N·lead,) owner ranks} — ownership at the finest stack
+    granularity: (row, lead-slice), row-major.
+
+    Row-level assignment caps parallelism at the path count, which on
+    scan-stacked models is tiny (qwen2-0.5b: 7 paths for 168 layer-factor
+    pairs) — one 2 GB row then has a single owner and the exchange can't
+    shrink.  Slicing the leading dims makes refresh FLOPs *and* the
+    owned-slice exchange genuinely scale ~1/W.
+
+    Within a bucket every slice costs the same (``cost(bucket)/lead``), so
+    the assignment balances each bucket's slice COUNT across workers first
+    (per-worker counts differ by at most 1 — exactly what minimizes the
+    padded all-gather size, since the exchange pads every worker to the
+    bucket max) and breaks count ties by global cost load (the LPT
+    objective; buckets are visited biggest-slice-first).  Deterministic on
+    every host, like :func:`assign_owners`.
+    """
+    costs = tuple(cost(b) / lead_size(b) for b in plan.buckets)
+    counts = tuple(len(b.paths) * lead_size(b) for b in plan.buckets)
+    return _assign_slices_cached(plan, costs, world, counts)
+
+
+@functools.lru_cache(maxsize=256)
+def _assign_pod_cached(plan: BucketPlan, costs: tuple, pods: tuple,
+                       counts: tuple) -> dict:
+    n_pods, per_pod = pods
+    owners = {b.key: np.zeros(n, np.int64)
+              for b, n in zip(plan.buckets, counts)}
+    if n_pods * per_pod > 1:
+        # LPT of whole buckets over pods: biggest total first to the
+        # least-loaded pod — every slice of a bucket lands in ONE pod, so
+        # the slice-granular gather stays on that pod's ICI links.
+        order = sorted(range(len(plan.buckets)),
+                       key=lambda bi: (-costs[bi] * counts[bi],
+                                       plan.buckets[bi].key))
+        pod_loads = np.zeros(n_pods, np.float64)
+        for bi in order:
+            key = plan.buckets[bi].key
+            pod = int(np.argmin(pod_loads))
+            pod_loads[pod] += costs[bi] * counts[bi]
+            # within the pod: balance slice counts over its workers (the
+            # same objective as the flat assignment — per-worker counts
+            # differ by <= 1, minimizing the padded gather)
+            for i in range(counts[bi]):
+                owners[key][i] = pod * per_pod + i % per_pod
+    return owners
+
+
+def assign_pod_slice_owners(plan: BucketPlan, cost: Callable[[Bucket], float],
+                            pods: tuple[int, int]) -> dict[str, np.ndarray]:
+    """Slice owners under a ``(n_pods, per_pod)`` topology: every bucket's
+    slices are owned by workers of a single pod (buckets LPT-balanced over
+    pods by total inverse cost, slices count-balanced within the pod).
+
+    Global ranks are row-major over ('pod', intra-pod) — matching
+    ``world_and_rank`` over the ('pod','data') axes — so the same owner
+    map drives both the cond-gated recompute and the two-stage exchange
+    (``repro.comm.exchange.allgather_owned_slices(pods=...)``).
+    """
+    costs = tuple(cost(b) / lead_size(b) for b in plan.buckets)
+    counts = tuple(len(b.paths) * lead_size(b) for b in plan.buckets)
+    return _assign_pod_cached(plan, costs, tuple(pods), counts)
 
 
 def describe_ownership(plan: BucketPlan, world: int,
                        sides: str = 'both') -> dict[str, list[int]]:
-    """JSON-able owner map (trainer logging)."""
-    owners = assign_owners(plan, inverse_cost(sides), world)
-    return {k: [int(w) for w in v] for k, v in owners.items()}
+    """JSON-able per-worker owned-slice counts per bucket (trainer
+    logging): {bucket_key: [slices owned by worker 0, 1, ...]}."""
+    owners = assign_slice_owners(plan, inverse_cost(sides), world)
+    return {k: np.bincount(v, minlength=world).tolist()
+            for k, v in owners.items()}
 
 
 # ---------------------------------------------------------------------------

@@ -8,18 +8,24 @@ re-implement ad hoc:
   ``interval`` kwarg as ``every_k(interval)``;
 * **gated, worker-sharded recomputation** — :func:`sharded_refresh` wraps
   the whole refresh in one ``lax.cond`` (skipped steps cost nothing) and,
-  under a live data-parallel mesh, gates each bucket item on ownership with
-  an inner ``lax.cond`` inside the stacked ``lax.map`` (``lax.map`` lowers
-  to ``scan``, so non-owned items really skip the inverse) before a
-  bucket-stacked psum exchange;
+  under a live data-parallel mesh, flattens each bucket's stack × leading
+  scan dims into slices and gates each slice on ownership with an inner
+  ``lax.cond`` inside the ``lax.map`` (``lax.map`` lowers to ``scan``, so
+  non-owned slices really skip the inverse) before the codec-aware
+  owned-slice exchange (``repro.comm.exchange``, per-worker traffic ~1/W;
+  the legacy full-stack psum stays available via
+  ``ExchangeConfig(exchange='psum')``);
 * **observability** — :func:`schedule_metrics` pulls refresh counts /
   staleness out of any optimizer state so the trainer can log them without
-  knowing optimizer internals.
+  knowing optimizer internals; the comm layer counts exchange bytes per
+  call-site.
 
 Bit-identity contract: with ``every_k(1)`` and/or a single worker, outputs
-are bit-identical (atol=0) to always-fresh recomputation; with W workers the
-psum-of-zero-padded-slices exchange preserves that bit-identity (see
-``repro.schedule.ownership``).
+are bit-identical (atol=0) to always-fresh recomputation.  With W workers
+the two exchange modes are bit-identical to each other under the f32 codec
+(owned-slice copies / x+0 psums are both exact); vs a single worker only
+the LAPACK batching of the slice-granular inverses can move the last float
+ulp (see ``recompute_sharded``).
 """
 from __future__ import annotations
 
@@ -29,9 +35,12 @@ from typing import Any, Callable, Mapping, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import exchange, metrics
+from repro.comm import codec as exchange_codec
 from repro.core.bucketing import Bucket, BucketPlan
 from repro.schedule import ownership
 from repro.schedule import policy as policy_mod
+from repro.sharding import compat
 from repro.sharding.constraints import psum_tree
 
 
@@ -81,7 +90,9 @@ def sharded_refresh(plan: BucketPlan, refresh: jnp.ndarray,
                     item_fn: Callable[[Bucket, Any], Any],
                     args_b: Mapping[str, Any], old_b: Mapping[str, Any],
                     *, cost: Callable[[Bucket], float],
-                    shard: bool = True) -> dict[str, Any]:
+                    shard: bool = True,
+                    comm: Optional[exchange.ExchangeConfig] = None,
+                    site: str = 'refresh') -> dict[str, Any]:
     """Recompute cached per-bucket values under a refresh decision.
 
     Args:
@@ -90,42 +101,104 @@ def sharded_refresh(plan: BucketPlan, refresh: jnp.ndarray,
         workers, so every worker takes the same cond branch).
       item_fn: ``(bucket, per_item_args) -> per_item_out`` — the expensive
         recomputation for ONE stack item (e.g. a damped-inverse pair).
+        Must broadcast over leading dims: single-worker it receives a whole
+        stack row (with any scan/expert lead dims), under a W>1 mesh one
+        (lead-flattened) slice at a time.
       args_b: {bucket_key: stacked-args pytree} (leading axis = stack).
       old_b: {bucket_key: stacked cached values} returned unchanged on
         non-refresh steps; also supplies output shapes/dtypes.
       cost: per-item FLOP estimate for ownership weighting.
       shard: disable to force every worker to recompute everything.
+      comm: exchange config (``Extras.comm``): which codec the refreshed
+        slices travel in and whether the exchange is the owned-slice
+        all-gather (default; per-worker traffic ~1/W of the stack) or the
+        legacy full-stack zero-padded psum.
+      site: call-site label for the ``repro.comm.metrics`` byte counters.
 
     Returns {bucket_key: refreshed stacked values} with ``old_b``'s
     structure.
     """
-    world, rank = ownership.world_and_rank() if shard else (1, None)
-    owners = ownership.assign_owners(plan, cost, world)
+    axes = ownership.data_axes_in_scope() if shard else ()
+    world, rank = ownership.world_and_rank(axes) if shard else (1, None)
+    cfg = exchange.from_extras(None) if comm is None else comm
 
-    def recompute(_):
+    def recompute_single(_):
+        # the exact legacy single-worker structure: one fused lax.map per
+        # bucket over stack ROWS, item_fn broadcasting over any leading
+        # scan/expert dims — this is the path the atol=0 every_k(1)-vs-
+        # legacy contracts compare (tests/test_schedule.py)
         out = {}
         for b in plan.buckets:
-            args = args_b[b.key]
-            old = old_b[b.key]
+            out[b.key] = jax.lax.map(lambda a, b=b: item_fn(b, a),
+                                     args_b[b.key])
+        return out
 
-            def one(t, b=b, old=old):
+    def recompute_sharded(_):
+        # W > 1: ownership at SLICE granularity — the stack axis and the
+        # leading scan/expert dims flatten into one (N·lead) slice axis, so
+        # refresh FLOPs and exchange traffic both scale ~1/W even when the
+        # model has few (huge, scan-stacked) parameter paths.  Caveat: a
+        # slice inverse runs LAPACK on one (d, d) matrix where the
+        # single-worker path batches (lead, d, d), which can move the last
+        # float ulp (~1e-6; batched-vs-single getrf) — the two exchange
+        # MODES below stay bit-identical to each other because they share
+        # this compute.
+        # topology='pod': pod-local ownership so the slice gather stays on
+        # the intra-pod (ICI) axis; needs both ('pod','data') axes live and
+        # the gather exchange (the full-stack psum has no gather stage)
+        pods = None
+        if cfg.topology == 'pod' and cfg.exchange == 'gather' \
+                and len(axes) == 2:
+            sizes = compat.bound_axis_sizes()
+            pods = (int(sizes.get(axes[0], 1)), int(sizes.get(axes[1], 1)))
+            if pods[0] <= 1 or pods[0] * pods[1] != world:
+                pods = None
+        owners = (ownership.assign_pod_slice_owners(plan, cost, pods)
+                  if pods is not None
+                  else ownership.assign_slice_owners(plan, cost, world))
+        out = {}
+        for b in plan.buckets:
+            nlead = len(b.shape) - 2
+            n_slices = len(b.paths) * ownership.lead_size(b)
+
+            def flat(x, nlead=nlead, n_slices=n_slices):
+                return x.reshape((n_slices,) + x.shape[1 + nlead:])
+
+            fargs = jax.tree_util.tree_map(flat, args_b[b.key])
+            fold = jax.tree_util.tree_map(flat, old_b[b.key])
+            own = jnp.asarray(owners[b.key])
+
+            def one(t, b=b, own=own, fold=fold):
                 idx, a = t
-                if world == 1:
-                    return item_fn(b, a)
-                own = jnp.asarray(owners[b.key])[idx]
                 zeros = jax.tree_util.tree_map(
-                    lambda x: jnp.zeros(x.shape[1:], x.dtype), old)
-                return jax.lax.cond(own == rank,
+                    lambda x: jnp.zeros(x.shape[1:], x.dtype), fold)
+                return jax.lax.cond(own[idx] == rank,
                                     lambda a: item_fn(b, a),
                                     lambda a: zeros, a)
 
-            idx = jnp.arange(len(b.paths), dtype=jnp.int32)
-            out[b.key] = jax.lax.map(one, (idx, args))
-        if world > 1:
-            # exchange: owners contributed real slices, everyone else zeros;
-            # the psum reconstructs the full stack bit-exactly on all workers
-            out = psum_tree(out)
-        return out
+            idx = jnp.arange(n_slices, dtype=jnp.int32)
+            out[b.key] = jax.lax.map(one, (idx, fargs))
+        # exchange: owners computed real slices, everyone else zeros.
+        # 'gather' ships only each worker's owned slices (static-shape
+        # padded gather, per-worker traffic ~1/W of the stack) and
+        # reconstructs every slice as an exact copy of its owner's value;
+        # 'psum' is the legacy full-stack zero-padded sum (x+0 exact).
+        # Exact copies and x+0 sums are both bit-exact, so the two modes
+        # agree atol=0 under the f32 codec.
+        if cfg.exchange == 'psum':
+            out = psum_tree(out, axes)
+            metrics.record(site, bytes_per_call=sum(
+                exchange.tree_payload_bytes(v, exchange_codec.F32)
+                for v in out.values()), codec='f32', mode='psum')
+        else:
+            out = exchange.allgather_owned_slices(
+                plan, owners, world, rank, out, codec=cfg.codec,
+                axes=axes, site=site, pods=pods)
+        return {k: jax.tree_util.tree_map(
+            lambda y, o: y.reshape(o.shape), out[k], old_b[k])
+            for k in out}
+
+    recompute = recompute_single if world == 1 else recompute_sharded
 
     def keep(_):
         return {b.key: old_b[b.key] for b in plan.buckets}

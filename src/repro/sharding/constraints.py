@@ -64,22 +64,37 @@ def data_axes_in_scope() -> tuple[str, ...]:
     return tuple(a for a in ('pod', 'data') if a in bound)
 
 
-def pmean_stats(tree):
+def pmean_stats(tree, codec=None, site: Optional[str] = None):
     """psum-average a pytree of per-bucket KV/KF statistics across the live
     data-parallel axes, making Eva's statistics batch-global as in the
     paper's multi-GPU setup (§3.3).
 
+    ``codec`` ('f32' | 'bf16' | 'int8' | a ``repro.comm.Codec``) selects
+    the wire format — the K-FAC/FOOF ``a_outer``/``b_outer`` factor
+    reduction moves O(d²) per layer (4-5× the gradient volume on the
+    roofline), so compressing it matters where Eva's O(d) KVs don't.
+    ``codec=None`` or 'f32' keeps the exact legacy ``lax.pmean`` ops, which
+    is what the atol=0 scheduling contracts compare against.
+
     No-op when no data axis is bound (single-host pjit path — there XLA's
     sharding propagation already reduces the stats with the gradients).
-    Idempotent under repetition: pmean of already-averaged replicated values
-    returns them unchanged, so composing with an outer explicit reduction
-    (e.g. ``train/compression.py``) is safe.
+    The f32/None path is idempotent under repetition (pmean of
+    already-averaged replicated values returns them unchanged), so
+    composing it with an outer explicit reduction (e.g.
+    ``train/compression.py``) is safe; the bf16/int8 paths re-quantize on
+    every application and must run exactly once per fresh statistic.
     """
     axes = data_axes_in_scope()
     if not axes or tree is None:
         return tree
-    return jax.tree_util.tree_map(
-        lambda x: jax.lax.pmean(x, axes if len(axes) > 1 else axes[0]), tree)
+    from repro.comm import exchange, get_codec
+    if get_codec(codec).passthrough:
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.pmean(x, axes if len(axes) > 1 else axes[0]),
+            tree)
+    reduced, _, _ = exchange.allreduce_mean_tree(tree, codec=codec, axes=axes,
+                                                 site=site)
+    return reduced
 
 
 def psum_tree(tree, axes: Optional[tuple[str, ...]] = None):

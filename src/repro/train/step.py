@@ -73,7 +73,8 @@ def make_train_step(model, opt: GradientTransformation,
                     taps_fn: Optional[Callable] = None,
                     donate: bool = True,
                     microbatches: int = 1,
-                    sched: Optional[schedrt.RefreshRuntime] = None) -> Callable:
+                    sched: Optional[schedrt.RefreshRuntime] = None,
+                    comm: Optional[Any] = None) -> Callable:
     """Build the pure train step.  ``taps_fn(params)`` overrides tap creation
     (needed for full-tap K-FAC on the simple models).
 
@@ -81,6 +82,11 @@ def make_train_step(model, opt: GradientTransformation,
     next to the bucket plan (train-level default policy + worker-sharded
     refresh switch); pass the same runtime to ``init_opt_state`` so the
     scheduling state is allocated for the policy that will actually run.
+
+    ``comm`` is the train-level ``repro.comm.ExchangeConfig`` threaded
+    through ``Extras.comm``: which codec the statistics reduction and the
+    owned-slice curvature-refresh exchange use under a live data-parallel
+    mesh (None = defaults: f32 wire, owned-slice all-gather refresh).
 
     ``microbatches > 1`` runs gradient accumulation: the global batch is
     split on dim 0 and scanned, summing grads (f32) and averaging KV stats.
@@ -130,7 +136,8 @@ def make_train_step(model, opt: GradientTransformation,
         updates, new_opt_state = opt.update(
             grads, opt_state, params=params,
             extras=Extras(stats=stats, loss=loss,
-                          plan=_plan_for_stats(grads, stats), sched=sched))
+                          plan=_plan_for_stats(grads, stats), sched=sched,
+                          comm=comm))
         new_params = apply_updates(params, updates)
         grad_norm = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
@@ -147,12 +154,13 @@ def make_train_step(model, opt: GradientTransformation,
 def init_opt_state(model, opt: GradientTransformation,
                    capture: kvlib.CaptureConfig, params, batch,
                    taps_fn: Optional[Callable] = None,
-                   sched: Optional[schedrt.RefreshRuntime] = None):
+                   sched: Optional[schedrt.RefreshRuntime] = None,
+                   comm: Optional[Any] = None):
     """Materialized optimizer state (examples/trainer).  ``batch`` may be
     arrays or ShapeDtypeStructs — stats shapes come from eval_shape."""
     sched = sched if sched is not None else schedrt.RefreshRuntime()
     if not capture.active:
-        return opt.init(params, Extras(sched=sched))
+        return opt.init(params, Extras(sched=sched, comm=comm))
 
     def stats_of(p, b):
         taps = taps_fn(p) if taps_fn is not None else None
@@ -164,7 +172,7 @@ def init_opt_state(model, opt: GradientTransformation,
         lambda s: jnp.zeros(s.shape, s.dtype), stats_shapes)
     return opt.init(params, Extras(stats=zero_stats,
                                    plan=_plan_for_stats(params, zero_stats),
-                                   sched=sched))
+                                   sched=sched, comm=comm))
 
 
 def stats_plan_of(model, capture: kvlib.CaptureConfig, params, batch,
@@ -186,8 +194,10 @@ def stats_plan_of(model, capture: kvlib.CaptureConfig, params, batch,
 def abstract_opt_state(model, opt: GradientTransformation,
                        capture: kvlib.CaptureConfig, params_abstract, batch_specs,
                        taps_fn: Optional[Callable] = None,
-                       sched: Optional[schedrt.RefreshRuntime] = None):
+                       sched: Optional[schedrt.RefreshRuntime] = None,
+                       comm: Optional[Any] = None):
     """ShapeDtypeStruct pytree of the optimizer state (dry-run path)."""
     def init_fn(p, b):
-        return init_opt_state(model, opt, capture, p, b, taps_fn, sched=sched)
+        return init_opt_state(model, opt, capture, p, b, taps_fn, sched=sched,
+                              comm=comm)
     return jax.eval_shape(init_fn, params_abstract, batch_specs)

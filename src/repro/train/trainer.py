@@ -27,6 +27,7 @@ from typing import Any, Callable, Iterable, Optional
 import jax
 import numpy as np
 
+from repro.comm import metrics as comm_metrics
 from repro.core import kv as kvlib
 from repro.core.transform import GradientTransformation
 from repro.schedule import ownership
@@ -50,19 +51,21 @@ class Trainer:
     def __init__(self, model, opt: GradientTransformation,
                  capture: kvlib.CaptureConfig, cfg: TrainerConfig,
                  taps_fn: Optional[Callable] = None,
-                 sched: Optional[schedrt.RefreshRuntime] = None):
+                 sched: Optional[schedrt.RefreshRuntime] = None,
+                 comm=None):
         self.model = model
         self.opt = opt
         self.capture = capture
         self.cfg = cfg
         self.taps_fn = taps_fn
         self.sched = sched if sched is not None else schedrt.RefreshRuntime()
+        self.comm = comm
         self.out_dir = Path(cfg.out_dir)
         self.out_dir.mkdir(parents=True, exist_ok=True)
         self.ckpt_dir = self.out_dir / 'ckpt'
         self._ckptr = ckpt.AsyncCheckpointer(self.ckpt_dir, cfg.keep_ckpts)
         step_fn = make_train_step(model, opt, capture, taps_fn=taps_fn,
-                                  sched=self.sched)
+                                  sched=self.sched, comm=comm)
         self.step_fn = jax.jit(step_fn,
                                donate_argnums=(0, 1) if cfg.donate else ())
         self._preempted = False
@@ -89,6 +92,20 @@ class Trainer:
         log_f.flush()
         print(f'[trainer] refresh ownership over W={world}: '
               + ' '.join(f'{k}:{v}' for k, v in owners.items()), flush=True)
+
+    def _log_comm(self, log_f, sites) -> None:
+        """One record after the step is traced: the per-call-site logical
+        exchange bytes the ``repro.comm`` layer counted for THIS trainer's
+        step (empty when nothing in this run exchanges — e.g. single-host
+        pjit)."""
+        if not sites:
+            return
+        rec = {'event': 'comm_exchange', 'sites': sites}
+        log_f.write(json.dumps(rec) + '\n')
+        log_f.flush()
+        print('[trainer] comm exchange: ' + ' '.join(
+            f"{s}:{v['bytes_per_call']}B/{v['codec']}/{v['mode']}"
+            for s, v in sorted(sites.items())), flush=True)
 
     # -- preemption ---------------------------------------------------------
 
@@ -122,7 +139,8 @@ class Trainer:
                                                 self.capture, params,
                                                 data.batch_at(0),
                                                 taps_fn=self.taps_fn,
-                                                sched=self.sched)}
+                                                sched=self.sched,
+                                                comm=self.comm)}
                 state, meta = ckpt.restore(self.ckpt_dir, latest, template)
                 params, opt_state = state['params'], state['opt_state']
                 start_step = meta.get('next_step', latest)
@@ -131,7 +149,23 @@ class Trainer:
         if opt_state is None:
             opt_state = init_opt_state(self.model, self.opt, self.capture,
                                        params, data.batch_at(start_step),
-                                       taps_fn=self.taps_fn, sched=self.sched)
+                                       taps_fn=self.taps_fn, sched=self.sched,
+                                       comm=self.comm)
+
+        # The comm byte counters are process-global and fill at TRACE time.
+        # To attribute sites to this trainer without destroying another
+        # run's records (no reset), baseline the per-site trace counts now:
+        # sites whose count grows during this fit's first step belong to
+        # this trainer; a warm-jit second fit() re-traces nothing, so fall
+        # back to the sites remembered from this trainer's previous fit.
+        base_traces = {k: v.get('traces', 0)
+                       for k, v in comm_metrics.snapshot().items()}
+
+        # refresh count already in the (possibly restored) state — the
+        # cumulative exchanged-bytes estimate below must count only THIS
+        # run's refreshes, like it counts only this run's steps
+        base_sched = schedrt.schedule_metrics(opt_state)
+        ref_base = int(base_sched['refreshes']) if base_sched else 0
 
         if self.cfg.donate:
             # the jitted step donates its inputs; don't delete caller-owned
@@ -151,6 +185,12 @@ class Trainer:
                                                           batch)
                 loss = float(metrics['loss'])  # sync point
                 dt = time.perf_counter() - t0
+                if step == start_step:
+                    fresh = {k: v for k, v in comm_metrics.snapshot().items()
+                             if v.get('traces', 0) > base_traces.get(k, 0)}
+                    if fresh:
+                        self._run_sites = fresh
+                    self._log_comm(log_f, getattr(self, '_run_sites', {}))
                 self._watch_straggler(step, dt)
                 history.append(loss)
                 if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
@@ -164,6 +204,22 @@ class Trainer:
                         rec['refresh_since'] = int(metrics['refresh_since'])
                         sched_line = (f" refreshes {rec['refreshes']}"
                                       f" staleness {rec['staleness']:.3g}")
+                    # cumulative exchanged bytes, from THIS trainer's comm
+                    # sites: per-step sites (grads/stats) fire every
+                    # step, refresh sites once per realized refresh
+                    sites = getattr(self, '_run_sites', {})
+                    if sites:
+                        step_b = sum(v['bytes_per_call']
+                                     for s, v in sites.items()
+                                     if not s.startswith('refresh/'))
+                        refresh_b = sum(v['bytes_per_call']
+                                        for s, v in sites.items()
+                                        if s.startswith('refresh/'))
+                        rec['exchanged_mb_cum'] = round(
+                            (step_b * (step + 1 - start_step)
+                             + refresh_b * (rec.get('refreshes', ref_base)
+                                            - ref_base))
+                            / 2 ** 20, 3)
                     log_f.write(json.dumps(rec) + '\n')
                     log_f.flush()
                     print(f'[trainer] step {step:6d} loss {loss:.4f} '

@@ -1,0 +1,229 @@
+"""Codec layer (repro.comm.codec): round-trip exactness, error-feedback
+convergence, saturation accounting, and the byte bookkeeping.
+
+Contracts proven here:
+  * ``f32`` round-trips any value exactly; ``bf16`` round-trips exactly
+    where the value is bf16-representable;
+  * the int8 codec's carried error-feedback residual keeps the *cumulative*
+    compressed-mean trajectory within a quantization-step tolerance of the
+    exact mean over many steps (EF-SGD's telescoping-error property) — this
+    is what makes compressed-gradient training converge;
+  * the saturation counter is 0 by construction under the true max scale
+    and counts correctly under an understated scale;
+  * ``quantize_allreduce`` (the public compression API) still matches a
+    from-scratch reference of the historical op sequence bit-for-bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import exchange, get_codec, metrics
+from repro.comm.codec import BF16, F32, INT8_EF, SCALE_FLOOR
+
+
+# ---------------------------------------------------------------------------
+# Round-trips
+
+
+def test_f32_roundtrip_exact():
+    x = jnp.asarray(np.random.RandomState(0).randn(7, 5).astype(np.float32))
+    p, s, sat = F32.encode(x, jnp.max(jnp.abs(x)))
+    np.testing.assert_array_equal(np.asarray(F32.decode(p, s)), np.asarray(x))
+    assert float(sat) == 0.0
+
+
+def test_bf16_roundtrip_exact_where_representable():
+    raw = jnp.asarray(np.random.RandomState(1).randn(64).astype(np.float32))
+    x = raw.astype(jnp.bfloat16).astype(jnp.float32)   # representable values
+    p, s, sat = BF16.encode(x, jnp.max(jnp.abs(x)))
+    assert p.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(BF16.decode(p, s)), np.asarray(x))
+    # and a non-representable value moves by at most one bf16 ulp
+    y = jnp.float32(1.0 + 2 ** -10)
+    d = abs(float(BF16.decode(*BF16.encode(y, jnp.abs(y))[:2])) - float(y))
+    assert d <= 2 ** -8
+
+
+def test_int8_quantization_error_bounded_by_half_step():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(16, 16).astype(np.float32) * 3.0)
+    amax = jnp.max(jnp.abs(x))
+    q, scale, sat = INT8_EF.encode(x, amax)
+    assert q.dtype == jnp.int8 and float(sat) == 0.0
+    err = np.abs(np.asarray(INT8_EF.decode(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-7
+
+
+def test_int8_zero_tensor_scale_floor():
+    x = jnp.zeros((4, 4), jnp.float32)
+    q, scale, sat = INT8_EF.encode(x, jnp.max(jnp.abs(x)))
+    assert float(scale) == float(np.float32(SCALE_FLOOR))
+    assert float(sat) == 0.0
+    np.testing.assert_array_equal(np.asarray(INT8_EF.decode(q, scale)), 0.0)
+
+
+def test_int8_saturation_counts_understated_scale():
+    """Saturation is impossible under the true max (the clamp only raises
+    the scale) but must be *counted* when a caller understates it."""
+    x = jnp.asarray([10.0, -10.0, 1.0, 0.5], jnp.float32)
+    _, _, sat_true = INT8_EF.encode(x, jnp.max(jnp.abs(x)))
+    assert float(sat_true) == 0.0
+    _, _, sat_lo = INT8_EF.encode(x, jnp.asarray(1.0))   # pretend max is 1
+    assert float(sat_lo) == 2.0                          # the two ±10s
+
+
+def test_get_codec_registry():
+    assert get_codec(None) is F32
+    assert get_codec('bf16') is BF16
+    assert get_codec(INT8_EF) is INT8_EF
+    assert get_codec('int8').error_feedback
+    with pytest.raises(KeyError):
+        get_codec('fp4')
+
+
+def test_init_err_only_for_error_feedback():
+    tree = {'w': jnp.ones((3, 2), jnp.bfloat16)}
+    assert F32.init_err(tree) is None
+    e = INT8_EF.init_err(tree)
+    assert e['w'].dtype == jnp.float32 and e['w'].shape == (3, 2)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting
+
+
+def test_tree_payload_bytes():
+    tree = {'a': jnp.zeros((10, 10)), 'b': jnp.zeros((5,))}
+    assert exchange.tree_payload_bytes(tree, F32) == 4 * 105
+    assert exchange.tree_payload_bytes(tree, BF16) == 2 * 105
+    # int8: 1 byte/elem + one f32 scale per leaf
+    assert exchange.tree_payload_bytes(tree, INT8_EF) == 105 + 2 * 4
+
+
+def test_metrics_record_snapshot_reset():
+    metrics.reset()
+    metrics.record('x', bytes_per_call=128, codec='int8', mode='allreduce')
+    metrics.record('x', bytes_per_call=128, codec='int8', mode='allreduce')
+    snap = metrics.snapshot()
+    assert snap['x']['traces'] == 2 and snap['x']['bytes_per_call'] == 128
+    snap['x']['traces'] = 0                    # copies, not views
+    assert metrics.snapshot()['x']['traces'] == 2
+    metrics.reset()
+    assert metrics.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# quantize_allreduce stays the historical op sequence (W=1 collective-free
+# reference; the multi-worker form is proven in test_comm_exchange.py)
+
+
+def test_quantize_allreduce_leaf_matches_reference():
+    rng = np.random.RandomState(3)
+    g = jnp.asarray(rng.randn(9, 6).astype(np.float32))
+    err = jnp.asarray(rng.randn(9, 6).astype(np.float32) * 0.01)
+    # the historical inline math, axis-free (W=1):
+    x = g + err
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    ref_mean = q.astype(jnp.float32) * scale
+    ref_err = x - ref_mean
+    mean, new_err, sat = exchange.allreduce_mean_leaf(
+        g, err, codec='int8', axes=())
+    np.testing.assert_array_equal(np.asarray(mean), np.asarray(ref_mean))
+    np.testing.assert_array_equal(np.asarray(new_err), np.asarray(ref_err))
+    assert float(sat) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback property (hypothesis where available — CI installs it; the
+# deterministic tests above must run regardless, so no module-level skip)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HYP = True
+except ImportError:                                    # pragma: no cover
+    _HYP = False
+
+    def given(**kw):                                   # noqa: D103
+        def deco(fn):
+            def _skipped(*a, **k):
+                pytest.skip('hypothesis not installed')
+            _skipped.__name__ = fn.__name__
+            return _skipped
+        return deco
+
+    def settings(**kw):                                # noqa: D103
+        return lambda fn: fn
+
+    class st:                                          # noqa: D101
+        integers = staticmethod(lambda *a, **k: None)
+        floats = staticmethod(lambda *a, **k: None)
+
+
+def _ef_trajectory_check(seed, w, steps, d, scale_mag):
+    """EF telescoping: over T steps the sum of compressed means differs from
+    the sum of exact means only by the final residual mean — bounded by half
+    a quantization step, NOT growing with T."""
+    rng = np.random.RandomState(seed)
+    errs = [jnp.zeros((d,), jnp.float32) for _ in range(w)]
+    cum_comp = np.zeros(d, np.float64)
+    cum_exact = np.zeros(d, np.float64)
+    max_scale = 0.0
+    for _ in range(steps):
+        xs = [jnp.asarray((rng.randn(d) * scale_mag).astype(np.float32))
+              for _ in range(w)]
+        # shared global scale = pmax of per-worker maxima (what the live
+        # collective computes), then per-worker encode + exact int32 sum
+        amax = jnp.max(jnp.stack([jnp.max(jnp.abs(x + e))
+                                  for x, e in zip(xs, errs)]))
+        total = jnp.zeros((d,), jnp.int32)
+        scale = None
+        for i in range(w):
+            x = xs[i] + errs[i]
+            q, scale, sat = INT8_EF.encode(x, amax)
+            assert float(sat) == 0.0
+            errs[i] = x - q.astype(jnp.float32) * scale
+            total = total + q.astype(jnp.int32)
+        comp_mean = np.asarray(total, np.float64) * float(scale) / w
+        exact_mean = np.mean([np.asarray(x, np.float64) for x in xs], axis=0)
+        cum_comp += comp_mean
+        cum_exact += exact_mean
+        max_scale = max(max_scale, float(scale))
+    resid = np.mean([np.asarray(e, np.float64) for e in errs], axis=0)
+    # exact identity: cum_comp == cum_exact - resid (up to f32 roundoff)
+    np.testing.assert_allclose(cum_comp, cum_exact - resid,
+                               rtol=1e-4, atol=max_scale * 1e-3 + 1e-6)
+    # and the drift is bounded by half a step, independent of T
+    assert np.max(np.abs(cum_comp - cum_exact)) <= 0.5 * max_scale + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), w=st.integers(1, 4),
+       steps=st.integers(5, 40), d=st.integers(1, 32),
+       scale_mag=st.floats(0.01, 100.0))
+def test_int8_ef_cumulative_mean_tracks_exact(seed, w, steps, d, scale_mag):
+    _ef_trajectory_check(seed, w, steps, d, scale_mag)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), d=st.integers(1, 64))
+def test_f32_bf16_roundtrip_property(seed, d):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(d).astype(np.float32))
+    m, e, sat = exchange.allreduce_mean_leaf(x, None, codec='f32', axes=())
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(x))
+    xb = x.astype(jnp.bfloat16).astype(jnp.float32)
+    m, e, sat = exchange.allreduce_mean_leaf(xb, None, codec='bf16', axes=())
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(xb))
+
+
+# Deterministic anchor points for the EF property, so the contract is
+# exercised even where hypothesis is absent (this container).
+@pytest.mark.parametrize('seed,w,steps,d,scale_mag', [
+    (0, 4, 40, 32, 100.0),
+    (7, 3, 25, 8, 0.01),
+    (42, 1, 5, 1, 1.0),
+])
+def test_int8_ef_trajectory_anchor(seed, w, steps, d, scale_mag):
+    _ef_trajectory_check(seed, w, steps, d, scale_mag)

@@ -7,7 +7,9 @@ Contracts proven here:
     pre-runtime update structure (``count % interval`` under ``lax.cond``,
     always-fresh KV snapshots for the eva family);
   * single-host refresh ≡ W-worker ownership-sharded refresh under
-    shard_map (subprocess with 4 host devices), bit-exact;
+    shard_map (subprocess with 4 host devices) to float tolerance — the
+    exchange itself is bit-exact (see tests/test_comm_exchange.py), the
+    slice-granular compute batches LAPACK differently (last-ulp);
   * policy semantics: every_k counts, warmup_then_k, adaptive drift
     triggering;
   * ownership assignment is deterministic, covers every item, and balances
@@ -539,6 +541,7 @@ _SHARD_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.multihost
 def test_sharded_refresh_matches_single_host():
     out = subprocess.run(
         [sys.executable, '-c', _SHARD_SCRIPT],
@@ -548,14 +551,19 @@ def test_sharded_refresh_matches_single_host():
     assert out.returncode == 0, out.stderr[-3000:]
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     assert rec['devices'] == 4
-    # The ownership machinery (per-item cond gating + psum exchange of
-    # zero-padded slices) is BIT-exact: W-worker sharded refresh equals
-    # W-worker redundant refresh on the same mesh, state included.
-    assert rec['shard_vs_redundant_out'] == 0.0
-    assert rec['shard_vs_redundant_state'] == 0.0
-    # Against a single host the only difference is the pre-existing
-    # pmean_stats reduction of replicated statistics (a psum of four equal
-    # f32 values can round in the last ulp); the trajectory must still agree
-    # to float tolerance.
+    # W-worker sharded refresh vs W-worker redundant refresh on the same
+    # mesh: the EXCHANGE is bit-exact (owned-slice copies / x+0 psums —
+    # tests/test_comm_exchange.py proves allgather ≡ psum atol=0 for all
+    # six methods), but since the comm layer the sharded path owns stack
+    # slices at (row × lead-dim) granularity, so its LAPACK inverses run
+    # per (d, d) slice where the redundant worker batches (lead, d, d) —
+    # batched-vs-single getrf moves the last float ulp (~1e-6,
+    # data-dependent; see the lax.map note in test_bucketing).
+    assert rec['shard_vs_redundant_out'] < 1e-4
+    assert rec['shard_vs_redundant_state'] < 1e-4
+    # Against a single host: additionally the pre-existing pmean_stats
+    # reduction of replicated statistics (a psum of four equal f32 values
+    # can round in the last ulp); the trajectory must still agree to float
+    # tolerance.
     assert rec['shard_vs_single_out'] < 1e-4
     assert rec['shard_vs_single_state'] < 1e-4
