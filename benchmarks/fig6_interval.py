@@ -75,10 +75,16 @@ def run(steps: int = STEPS, methods=None) -> None:
                  f'staleness={staleness:.3g}')
 
 
-def run_drift_sweep(methods: list[str], steps: int = 40) -> None:
+def run_drift_sweep(methods: list[str], steps: int = 120) -> None:
     """Adaptive-threshold calibration on the demo-LM config: refresh-count
     vs tail-loss rows for each threshold, next to the every_k Pareto
-    points the thresholds must beat."""
+    points the thresholds must beat.
+
+    Default horizon is 120 steps (3× the policy grid's): at 40 steps the
+    drift statistic has barely left its warm-up transient, so every
+    threshold below ~0.09 kept refreshing near-every-step and the sweep
+    could not separate them; by 120 steps the drift scale settles and the
+    low thresholds spread out (see the BENCH_fig6_drift.json rows)."""
     cfg = demo_lm('small')
     model = build_model(cfg)
     params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
@@ -114,7 +120,11 @@ def main() -> None:
                     help='adaptive drift-threshold calibration on the '
                          'demo-LM config (0.01-0.2 log grid vs every_k '
                          'Pareto points)')
-    ap.add_argument('--steps', type=int, default=40)
+    ap.add_argument('--steps', type=int, default=None,
+                    help='horizon override; defaults to 40 for the policy '
+                         'grid and 120 for --drift-sweep (the drift '
+                         'statistic needs ~3x the grid horizon to leave '
+                         'its warm-up transient)')
     ap.add_argument('--methods', default=None,
                     help='comma-separated method filter, used by BOTH the '
                          'policy grid (default: all six; CI smoke passes a '
@@ -127,9 +137,9 @@ def main() -> None:
                if args.methods else None)
     print('name,us_per_call,derived')
     if args.drift_sweep:
-        run_drift_sweep(methods or ['eva'], steps=args.steps)
+        run_drift_sweep(methods or ['eva'], steps=args.steps or 120)
     else:
-        run(steps=args.steps, methods=methods)
+        run(steps=args.steps or STEPS, methods=methods)
     if args.json:
         write_json(args.json)
 

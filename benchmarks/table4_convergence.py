@@ -6,12 +6,21 @@ Two tasks (synthetic stand-ins for Cifar per DESIGN.md §8):
   * demo transformer LM on the bigram stream — CE after N steps for
     SGD / AdamW / Eva / Eva-f / Eva-s (bigram entropy floor printed).
 Claim under test: Eva ≥ SGD at equal iterations, Eva ≈ K-FAC.
+
+``--kappa-sweep`` calibrates the ``kl_clip_trace`` trust-region radius κ
+(ROADMAP "κ calibration"): CE after a fixed budget on the *base*-scale
+demo LM (~10M params — the 'small' config the rest of this file uses is
+too shallow to stress the trust region) for κ on a 1e-4..1e-2 log grid
+around the 1e-3 default.
 """
 from __future__ import annotations
 
-import jax
+import argparse
 
-from benchmarks.common import classifier_accuracy, emit, time_fn
+import jax
+import numpy as np
+
+from benchmarks.common import classifier_accuracy, emit, time_fn, write_json
 from repro.configs.registry import demo_lm
 from repro.core.registry import make_optimizer
 from repro.data.synthetic import ClassStream, LMStream
@@ -24,6 +33,8 @@ CLS_STEPS = 60
 LM_STEPS = 60
 LRS = {'sgd': 0.05, 'adagrad': 0.02, 'adamw': 1e-3, 'kfac': 0.05, 'eva': 0.05,
        'eva_f': 0.05, 'eva_s': 0.05}
+
+KAPPA_GRID = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2)
 
 
 def run() -> None:
@@ -59,3 +70,65 @@ def run() -> None:
             params, state, m = step(params, state, data.batch_at(i))
         emit(f'table4/lm/{name}', 0.0,
              f'ce_at_{LM_STEPS}={float(m["loss"]):.4f}')
+
+
+def run_kappa_sweep(methods: list[str], steps: int = 80,
+                    scale: str = 'base') -> None:
+    """κ calibration for the KL trust region on the larger demo LM.
+
+    Each cell trains ``steps`` iterations and reports the tail-geomean CE
+    (last 8 steps — single-step losses near the floor are minibatch noise,
+    same convention as the fig6 drift sweep) so κ values separate by
+    converged quality rather than by one lucky batch."""
+    cfg = demo_lm(scale)
+    data = LMStream(vocab=cfg.vocab, seq_len=32, batch=8, seed=1)
+    emit(f'table4/kappa/bigram_floor_{scale}', 0.0,
+         f'ce_floor={data.bigram_ce:.4f}')
+    for name in methods:
+        model = build_model(cfg)
+        params0 = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+        for kappa in KAPPA_GRID:
+            opt, capture = make_optimizer(name, lr=LRS[name], kl_kappa=kappa)
+            state = init_opt_state(model, opt, capture, params0,
+                                   data.batch_at(0))
+            step = jax.jit(make_train_step(model, opt, capture))
+            p, losses = params0, []
+            for i in range(steps):
+                p, state, m = step(p, state, data.batch_at(i))
+                losses.append(float(m['loss']))
+            tail = float(np.exp(np.mean(np.log(np.asarray(losses[-8:])))))
+            emit(f'table4/kappa/{scale}/{name}@k{kappa:g}', 0.0,
+                 f'tail_ce_at_{steps}={tail:.4f}')
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument('--kappa-sweep', action='store_true',
+                    help='kl_clip_trace κ calibration on the base-scale '
+                         'demo LM (1e-4..1e-2 log grid around the 1e-3 '
+                         'default) instead of the accuracy/CE table')
+    ap.add_argument('--scale', default='base',
+                    help="demo-LM scale for --kappa-sweep (default 'base')")
+    ap.add_argument('--steps', type=int, default=80,
+                    help='iteration budget per --kappa-sweep cell')
+    ap.add_argument('--methods', default=None,
+                    help='comma-separated method filter for --kappa-sweep '
+                         '(default: eva — kfac cannot run the base-scale '
+                         'demo LM yet: its init-time b_outer stats drop '
+                         'the scan path dim, see ROADMAP carried items)')
+    ap.add_argument('--json', default=None, metavar='PATH',
+                    help='also write the emitted rows to PATH as JSON')
+    args = ap.parse_args()
+    print('name,us_per_call,derived')
+    if args.kappa_sweep:
+        methods = ([m.strip() for m in args.methods.split(',')]
+                   if args.methods else ['eva'])
+        run_kappa_sweep(methods, steps=args.steps, scale=args.scale)
+    else:
+        run()
+    if args.json:
+        write_json(args.json)
+
+
+if __name__ == '__main__':
+    main()

@@ -7,14 +7,22 @@ per-call-site logical byte accounting (``metrics``).
 """
 from repro.comm import metrics
 from repro.comm.codec import BF16, CODECS, F32, INT8_EF, Codec, get_codec
-from repro.comm.exchange import (ExchangeConfig, allgather_owned_slices,
+from repro.comm.exchange import (ExchangeConfig, InFlightMean,
+                                 InFlightSlices, allgather_owned_slices,
                                  allreduce_mean_leaf, allreduce_mean_tree,
-                                 from_extras, refresh_exchange_bytes,
-                                 slice_stack_specs, tree_payload_bytes)
+                                 collect_allgather_owned_slices,
+                                 collect_allreduce_mean_tree, from_extras,
+                                 issue_allgather_owned_slices,
+                                 issue_allreduce_mean_tree,
+                                 refresh_exchange_bytes, slice_stack_specs,
+                                 tree_payload_bytes)
 
 __all__ = [
     'BF16', 'CODECS', 'F32', 'INT8_EF', 'Codec', 'get_codec',
-    'ExchangeConfig', 'allgather_owned_slices', 'allreduce_mean_leaf',
-    'allreduce_mean_tree', 'from_extras', 'refresh_exchange_bytes',
+    'ExchangeConfig', 'InFlightMean', 'InFlightSlices',
+    'allgather_owned_slices', 'allreduce_mean_leaf', 'allreduce_mean_tree',
+    'collect_allgather_owned_slices', 'collect_allreduce_mean_tree',
+    'from_extras', 'issue_allgather_owned_slices',
+    'issue_allreduce_mean_tree', 'refresh_exchange_bytes',
     'slice_stack_specs', 'tree_payload_bytes', 'metrics',
 ]

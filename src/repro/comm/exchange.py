@@ -23,12 +23,21 @@ account their logical traffic per call site (``repro.comm.metrics``):
   size.  With the f32 codec the reconstruction is bit-exact: every row is
   an exact copy of its owner's computed value — the same value the psum of
   zero-padded slices reconstructs.
+
+Both primitives are split into an ``issue_*`` half (encode + every
+collective + byte accounting) and a ``collect_*`` half (decode / divide /
+reconstruct — pure local math).  The synchronous names compose the halves
+back bit-exactly; the one-step pipeline (``repro.schedule.pipeline``)
+issues at step *t* and applies at *t+1* so the collectives can overlap
+compute.  One exception: the pod two-stage gather's final pod-axis psum
+consumes the reconstruction, so its issue half carries the exchange to
+completion and collect is the identity.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional, Sequence
+from typing import Any, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -129,7 +138,70 @@ def tree_payload_bytes(tree, codec: Codec, scale_elems: int = 1) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Mean all-reduce
+# Mean all-reduce — split into an issue half (encode + every collective)
+# and a collect half (decode + divide: pure local math).  The synchronous
+# entry points compose collect(issue(...)) and are op-for-op the sequence
+# they always were; the one-step pipeline (schedule/pipeline.py) keeps the
+# same split but feeds the collected value to the NEXT step, so the
+# collectives issued here never enter the current step's compute cone.
+
+
+def _mean_divisor(c: Codec, axes: Sequence[str]):
+    """The divisor the collect half applies.  Passthrough codecs divide by
+    the trace-time axis size (exactly what ``lax.pmean`` does internally:
+    ``psum`` of a non-traced 1 folds to the axis size with no collective);
+    lossy codecs keep the historical runtime psum-of-ones — NOT the
+    best-effort axis-env probe, whose false-negative must not silently turn
+    the mean into a W×-too-large sum."""
+    if not axes:
+        return None
+    if c.passthrough:
+        return jax.lax.psum(1, _axis_arg(axes))
+    return jax.lax.psum(jnp.ones((), jnp.float32), _axis_arg(axes))
+
+
+def _issue_mean_leaf(g: jnp.ndarray, err: Optional[jnp.ndarray], *,
+                     c: Codec, axes: tuple):
+    """Collective half for one leaf: fold the EF residual, encode, fire the
+    pmax/psum.  Returns ``(payload, scale, new_err, n_sat)`` where
+    ``payload`` is the psum'd wire total (or the local encode when no axes
+    are live) and ``scale`` survives only when collect still needs it."""
+    x = g.astype(jnp.float32)
+    if c.error_feedback and err is not None:
+        x = x + err
+    if c.passthrough:
+        p = jax.lax.psum(x, _axis_arg(axes)) if axes else x
+        return p, None, err, jnp.zeros((), jnp.float32)
+    amax = None
+    if c.has_scale:
+        # only scaled codecs consume the max; bf16 must not pay the O(n)
+        # reduction + blocking pmax it would then ignore
+        amax = jnp.max(jnp.abs(x))
+        if axes:
+            amax = jax.lax.pmax(amax, _axis_arg(axes))
+    payload, scale, n_sat = c.encode(x, amax)
+    new_err = err
+    if c.error_feedback:
+        new_err = x - c.decode(payload, scale)
+    if not axes:
+        return payload, scale, new_err, n_sat
+    if c.sum_dtype is not None:
+        total = jax.lax.psum(payload.astype(c.sum_dtype), _axis_arg(axes))
+        return total, scale, new_err, n_sat
+    # no exact-sum wire dtype: decode locally, psum the decoded values
+    total = jax.lax.psum(c.decode(payload, scale), _axis_arg(axes))
+    return total, None, new_err, n_sat
+
+
+def _collect_mean_leaf(payload, scale, n, *, c: Codec, axes: tuple):
+    """Local finishing math for one leaf: decode and/or divide."""
+    if c.passthrough:
+        return payload / n if axes else payload
+    if not axes:
+        return c.decode(payload, scale)
+    if c.sum_dtype is not None:
+        return c.decode(payload, scale) / n
+    return payload / n
 
 
 def allreduce_mean_leaf(g: jnp.ndarray, err: Optional[jnp.ndarray], *,
@@ -148,66 +220,49 @@ def allreduce_mean_leaf(g: jnp.ndarray, err: Optional[jnp.ndarray], *,
     """
     c = get_codec(codec)
     axes = tuple(axes)
-    x = g.astype(jnp.float32)
-    if c.error_feedback and err is not None:
-        x = x + err
-    if c.passthrough:
-        mean = jax.lax.pmean(x, _axis_arg(axes)) if axes else x
-        return mean, err, jnp.zeros((), jnp.float32)
-    amax = None
-    if c.has_scale:
-        # only scaled codecs consume the max; bf16 must not pay the O(n)
-        # reduction + blocking pmax it would then ignore
-        amax = jnp.max(jnp.abs(x))
-        if axes:
-            amax = jax.lax.pmax(amax, _axis_arg(axes))
-    payload, scale, n_sat = c.encode(x, amax)
-    new_err = err
-    if c.error_feedback:
-        new_err = x - c.decode(payload, scale)
-    if not axes:
-        return c.decode(payload, scale), new_err, n_sat
-    # divisor is a runtime psum-of-ones, NOT the trace-time axis-env probe
-    # (compat.bound_axis_sizes): the probe is best-effort and a
-    # false-negative there must not silently turn the mean into a
-    # W×-too-large sum (the historical quantize_allreduce computed n
-    # exactly this way)
-    n = jax.lax.psum(jnp.ones((), jnp.float32), _axis_arg(axes))
-    if c.sum_dtype is not None:
-        total = jax.lax.psum(payload.astype(c.sum_dtype), _axis_arg(axes))
-        mean = c.decode(total, scale) / n
-    else:
-        total = jax.lax.psum(c.decode(payload, scale), _axis_arg(axes))
-        mean = total / n
-    return mean, new_err, n_sat
+    payload, scale, new_err, n_sat = _issue_mean_leaf(g, err, c=c, axes=axes)
+    n = _mean_divisor(c, axes)
+    return _collect_mean_leaf(payload, scale, n, c=c, axes=axes), new_err, n_sat
 
 
-def allreduce_mean_tree(tree: Any, err: Optional[Any] = None, *,
-                        codec: Any = 'f32',
-                        axes: Optional[Sequence[str]] = None,
-                        site: Optional[str] = None
-                        ) -> tuple[Any, Optional[Any], dict]:
-    """Mean all-reduce of a pytree; see :func:`allreduce_mean_leaf`.
+class InFlightMean(NamedTuple):
+    """An issued-but-not-collected mean all-reduce.  Lives inside one trace
+    (it is never checkpointed — the pipeline stores the *collected* tree);
+    ``collect_allreduce_mean_tree`` turns it into the final mean with local
+    math only."""
+    payloads: Optional[list]
+    scales: Optional[list]
+    n: Any
+    new_err: Any
+    info: dict
+    treedef: Any
+    codec: Codec
+    axes: tuple
 
-    Returns ``(mean_tree, new_err_tree, info)`` where ``info['saturation']``
-    is the global fraction of saturated elements (psum'd over workers so
-    any worker's overflow is visible everywhere; 0.0 by construction when
-    the scale comes from the true global max).
-    """
+
+def issue_allreduce_mean_tree(tree: Any, err: Optional[Any] = None, *,
+                              codec: Any = 'f32',
+                              axes: Optional[Sequence[str]] = None,
+                              site: Optional[str] = None) -> InFlightMean:
+    """Collective half of :func:`allreduce_mean_tree`: every pmax/psum (and
+    the byte accounting, and the EF residual update) happens here; decode +
+    divide wait for :func:`collect_allreduce_mean_tree`."""
     c = get_codec(codec)
     if axes is None:
         axes = data_axes_in_scope()
     axes = tuple(axes)
     zero = jnp.zeros((), jnp.float32)
     if tree is None:
-        return None, err, {'saturation': zero}
+        return InFlightMean(None, None, None, err, {'saturation': zero},
+                            None, c, axes)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     err_leaves = (jax.tree_util.tree_leaves(err) if err is not None
                   else [None] * len(leaves))
-    means, new_errs, sat, elems = [], [], zero, 0
+    payloads, scales, new_errs, sat, elems = [], [], [], zero, 0
     for g, e in zip(leaves, err_leaves):
-        m, ne, ns = allreduce_mean_leaf(g, e, codec=c, axes=axes)
-        means.append(m)
+        p, s, ne, ns = _issue_mean_leaf(g, e, c=c, axes=axes)
+        payloads.append(p)
+        scales.append(s)
         new_errs.append(ne)
         sat = sat + ns
         elems += metrics.leaf_elements(g)
@@ -225,8 +280,40 @@ def allreduce_mean_tree(tree: Any, err: Optional[Any] = None, *,
                        codec=c.name, mode='allreduce')
     new_err = (jax.tree_util.tree_unflatten(treedef, new_errs)
                if err is not None else None)
-    return (jax.tree_util.tree_unflatten(treedef, means), new_err,
-            {'saturation': sat_frac})
+    return InFlightMean(payloads, scales, _mean_divisor(c, axes), new_err,
+                        {'saturation': sat_frac}, treedef, c, axes)
+
+
+def collect_allreduce_mean_tree(fl: InFlightMean
+                                ) -> tuple[Any, Optional[Any], dict]:
+    """Local finishing half: decode + divide the in-flight totals.  Returns
+    the same ``(mean_tree, new_err_tree, info)`` as the composed call."""
+    if fl.treedef is None:
+        return None, fl.new_err, fl.info
+    means = [_collect_mean_leaf(p, s, fl.n, c=fl.codec, axes=fl.axes)
+             for p, s in zip(fl.payloads, fl.scales)]
+    return (jax.tree_util.tree_unflatten(fl.treedef, means), fl.new_err,
+            fl.info)
+
+
+def allreduce_mean_tree(tree: Any, err: Optional[Any] = None, *,
+                        codec: Any = 'f32',
+                        axes: Optional[Sequence[str]] = None,
+                        site: Optional[str] = None
+                        ) -> tuple[Any, Optional[Any], dict]:
+    """Mean all-reduce of a pytree; see :func:`allreduce_mean_leaf`.
+
+    Returns ``(mean_tree, new_err_tree, info)`` where ``info['saturation']``
+    is the global fraction of saturated elements (psum'd over workers so
+    any worker's overflow is visible everywhere; 0.0 by construction when
+    the scale comes from the true global max).
+
+    Composes the staged halves synchronously — the issue/collect split is
+    value-preserving (collect is decode + divide on the identical psum'd
+    totals), so this stays bit-exact with the pre-split implementation.
+    """
+    return collect_allreduce_mean_tree(issue_allreduce_mean_tree(
+        tree, err, codec=codec, axes=axes, site=site))
 
 
 # ---------------------------------------------------------------------------
@@ -273,38 +360,37 @@ def owned_slice_bytes(stack_tree: Any, owner, world: int,
     return total
 
 
-def allgather_owned_slices(plan, owners: dict, world: int, rank,
-                           stacks: dict, *, codec: Any = 'f32',
-                           axes: Optional[Sequence[str]] = None,
-                           site: Optional[str] = None,
-                           pods: Optional[tuple[int, int]] = None) -> dict:
-    """Reconstruct full bucket stacks from per-owner slices.
+class _GatheredLeaf(NamedTuple):
+    """One leaf's in-flight owned-slice gather: the wire payload (and scale)
+    as gathered from every worker, plus the static reconstruction recipe.
+    ``collect_allgather_owned_slices`` finishes with local math only."""
+    payload: Any       # (world, M, *item) gathered wire values
+    scale: Any         # (world, M, 1…) per-row scales, or None
+    src: Any           # (N,) flat gather position of each stack row
+    out_dtype: Any
 
-    Args:
-      plan: the ``BucketPlan`` whose stacked values are being exchanged.
-      owners: ``{bucket_key: (N,) owner ranks}`` from
-        ``ownership.assign_slice_owners`` (or ``assign_pod_slice_owners``
-        with ``pods=``) — static numpy, deterministic on every host, which
-        is what makes the index maps SPMD-consistent; N must match the
-        stacks' leading axis.
-      world / rank: from ``ownership.world_and_rank`` (world static, rank a
-        traced scalar).
-      stacks: ``{bucket_key: pytree of (N, *item) arrays}`` where each
-        worker holds real values at its owned rows (anything elsewhere —
-        the cond-gated zeros are never read).
-      codec: wire format; int8 uses one symmetric max-scale per stack row
-        (each row has exactly one producer, so no global pmax is needed).
-      pods: ``(n_pods, per_pod)`` for the topology-aware two-stage
-        exchange: ``owners`` must be pod-local
-        (``ownership.assign_pod_slice_owners``) and ``axes`` must be the
-        ('pod', intra-pod) pair.  The slice gather then runs over the
-        intra-pod axis only (ICI); the owning pod's reconstructed bucket
-        crosses the pod axis (DCN) once as a zero-padded psum (exact, like
-        the legacy exchange — but coarse-grained and pod-axis-only).
 
-    Returns stacks of identical structure with every row holding its
-    owner's value on every worker.
-    """
+class InFlightSlices(NamedTuple):
+    """An issued-but-not-collected owned-slice exchange.  ``done=True``
+    marks the pod two-stage path, whose final pod-axis psum *consumes* the
+    reconstruction — there the issue half carries the exchange to
+    completion and collect is the identity."""
+    stacks: dict       # {bucket_key: tree of _GatheredLeaf} (or final stacks)
+    done: bool
+    codec: Codec
+
+
+def issue_allgather_owned_slices(plan, owners: dict, world: int, rank,
+                                 stacks: dict, *, codec: Any = 'f32',
+                                 axes: Optional[Sequence[str]] = None,
+                                 site: Optional[str] = None,
+                                 pods: Optional[tuple[int, int]] = None
+                                 ) -> InFlightSlices:
+    """Collective half of :func:`allgather_owned_slices`: take the owned
+    rows, encode, all-gather payload + scales (and record bytes).  The
+    decode / reshape / reconstruction take are deferred to
+    :func:`collect_allgather_owned_slices` — pure local math, so a pipelined
+    caller keeps the gather itself out of the consuming compute's cone."""
     c = get_codec(codec)
     if axes is None:
         axes = data_axes_in_scope()
@@ -343,16 +429,17 @@ def allgather_owned_slices(plan, owners: dict, world: int, rank,
                 flat = vals.reshape((per_pod * local.shape[0],) + x.shape[1:])
                 recon = jnp.take(flat, src, axis=0)
                 # stage 2: only the owning pod's reconstruction is real;
-                # zero elsewhere and psum over the pod axis (x+0 exact)
+                # zero elsewhere and psum over the pod axis (x+0 exact).
+                # This psum CONSUMES the intra-pod reconstruction, so the
+                # pod path cannot defer it — issue carries it to the end.
                 my_pod = rank // per_pod
                 recon = jnp.where(my_pod == owner[0] // per_pod, recon,
                                   jnp.zeros_like(recon))
                 return jax.lax.psum(recon, axes[0]).astype(x.dtype)
             g_p = _all_gather(payload, axes, world)               # (W, M, ...)
             g_s = _all_gather(scale, axes, world) if scale is not None else None
-            vals = c.decode(g_p, g_s)
-            flat = vals.reshape((world * local.shape[0],) + x.shape[1:])
-            return jnp.take(flat, src, axis=0).astype(x.dtype)
+            return _GatheredLeaf(payload=g_p, scale=g_s, src=src,
+                                 out_dtype=x.dtype)
 
         out[b.key] = jax.tree_util.tree_map(leaf, stacks[b.key])
         if two_stage:
@@ -372,7 +459,67 @@ def allgather_owned_slices(plan, owners: dict, world: int, rank,
         else:
             metrics.record(site, bytes_per_call=nbytes, codec=c.name,
                            mode='gather', extra={'world': world})
-    return out
+    return InFlightSlices(stacks=out, done=two_stage, codec=c)
+
+
+def collect_allgather_owned_slices(fl: InFlightSlices) -> dict:
+    """Local finishing half: decode the gathered wire rows, flatten the
+    (world, M) gather layout and take each stack row from its owner's
+    position.  Identity for the pod two-stage path (see
+    :class:`InFlightSlices`)."""
+    if fl.done:
+        return fl.stacks
+    c = fl.codec
+
+    def leaf(gl: _GatheredLeaf):
+        vals = c.decode(gl.payload, gl.scale)
+        flat = vals.reshape((vals.shape[0] * vals.shape[1],) + vals.shape[2:])
+        return jnp.take(flat, gl.src, axis=0).astype(gl.out_dtype)
+
+    return {k: jax.tree_util.tree_map(
+        leaf, v, is_leaf=lambda x: isinstance(x, _GatheredLeaf))
+        for k, v in fl.stacks.items()}
+
+
+def allgather_owned_slices(plan, owners: dict, world: int, rank,
+                           stacks: dict, *, codec: Any = 'f32',
+                           axes: Optional[Sequence[str]] = None,
+                           site: Optional[str] = None,
+                           pods: Optional[tuple[int, int]] = None) -> dict:
+    """Reconstruct full bucket stacks from per-owner slices.
+
+    Args:
+      plan: the ``BucketPlan`` whose stacked values are being exchanged.
+      owners: ``{bucket_key: (N,) owner ranks}`` from
+        ``ownership.assign_slice_owners`` (or ``assign_pod_slice_owners``
+        with ``pods=``) — static numpy, deterministic on every host, which
+        is what makes the index maps SPMD-consistent; N must match the
+        stacks' leading axis.
+      world / rank: from ``ownership.world_and_rank`` (world static, rank a
+        traced scalar).
+      stacks: ``{bucket_key: pytree of (N, *item) arrays}`` where each
+        worker holds real values at its owned rows (anything elsewhere —
+        the cond-gated zeros are never read).
+      codec: wire format; int8 uses one symmetric max-scale per stack row
+        (each row has exactly one producer, so no global pmax is needed).
+      pods: ``(n_pods, per_pod)`` for the topology-aware two-stage
+        exchange: ``owners`` must be pod-local
+        (``ownership.assign_pod_slice_owners``) and ``axes`` must be the
+        ('pod', intra-pod) pair.  The slice gather then runs over the
+        intra-pod axis only (ICI); the owning pod's reconstructed bucket
+        crosses the pod axis (DCN) once as a zero-padded psum (exact, like
+        the legacy exchange — but coarse-grained and pod-axis-only).
+
+    Returns stacks of identical structure with every row holding its
+    owner's value on every worker.
+
+    Composes the staged halves synchronously (issue the gathers, then
+    decode/reconstruct locally) — value-preserving, so bit-exact with the
+    pre-split implementation.
+    """
+    return collect_allgather_owned_slices(issue_allgather_owned_slices(
+        plan, owners, world, rank, stacks, codec=codec, axes=axes,
+        site=site, pods=pods))
 
 
 def refresh_exchange_bytes(plan, owners: dict, stacks: Any, world: int, *,

@@ -17,14 +17,16 @@ from repro.core.eva import (_eva_cached_init, _extract, _refresh_snapshot,
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
-from repro.schedule import policy as schedpol, runtime as schedrt
-from repro.sharding.constraints import pmean_stats
+from repro.schedule import (pipeline as pipemod, policy as schedpol,
+                            runtime as schedrt)
 
 
 class EvaFState(NamedTuple):
     running: kvlib.RunningStats
     cached: Any
     sched: schedpol.SchedState
+    # pipeline='onestep': {'stats': PipelineState}; None in sync mode
+    pipe: Any = None
 
 
 def eva_f_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
@@ -40,25 +42,33 @@ def eva_f_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
         plan = _stats_plan(flat, extras.stats, extras)
         zeros = bucketing.gather_tree(
             plan, _zeros_like_spec(_extract(extras.stats, fields)))
-        pol = schedrt.from_extras(extras).resolve(policy, interval)
+        rt = schedrt.from_extras(extras)
+        pol = rt.resolve(policy, interval)
+        pipe = ({'stats': pipemod.init_state(zeros)}
+                if rt.pipeline == 'onestep' else None)
         return EvaFState(running=kvlib.init_running(zeros),
                          cached=_eva_cached_init(pol, zeros),
-                         sched=schedpol.init_state(pol, zeros))
+                         sched=schedpol.init_state(pol, zeros), pipe=pipe)
 
     def update(updates, state: EvaFState, params=None, extras: Extras | None = None):
         del params
-        pol = schedrt.from_extras(extras).resolve(policy, interval)
+        rt = schedrt.from_extras(extras)
+        pol = rt.resolve(policy, interval)
+        pipe = schedrt.resolve_pipe(rt, state.pipe)
         flat = kvlib.flatten_params(updates)
         fresh_flat = _extract(extras.stats, fields)
         plan = _stats_plan(flat, fresh_flat, extras)
-        fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat))
+        fresh, pipe_stats = pipemod.staged_pmean(
+            bucketing.gather_tree(plan, fresh_flat),
+            None if pipe is None else pipe['stats'])
         stats, running = kvlib.update_running(state.running, fresh, kv_decay)
         used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
                                                 state.cached)
         out = pre.precondition_tree(flat, used, 'eva_f', gamma, plan=plan,
                                     use_pallas=use_pallas)
         return kvlib.unflatten_params(out), EvaFState(
-            running=running, cached=cached, sched=sched)
+            running=running, cached=cached, sched=sched,
+            pipe=None if pipe is None else {'stats': pipe_stats})
 
     return GradientTransformation(init, update)
 

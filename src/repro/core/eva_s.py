@@ -9,6 +9,11 @@ temporal treatment of v, we mirror Eq. 14-15).
 Bucketed: the (v_in, v_out) running means live bucket-stacked (in the
 ``a_mean``/``b_mean`` LayerStats slots) and both the EMA and the rank-one
 update run once per (shape, dtype) bucket via ``precondition_tree``.
+
+Pipelining: eva_s performs **no curvature collective** (its KVs are local
+gradient means and data-parallel gradient averaging already happened in the
+grad psum), so ``RefreshRuntime(pipeline='onestep')`` is an exact no-op here
+— the state carries no ``pipe`` buffers and sync/onestep are bit-identical.
 """
 from __future__ import annotations
 

@@ -8,7 +8,7 @@ so ownership weighting uses the 'left' cost model).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,14 +23,18 @@ from repro.core.kfac import _damped_inv
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
-from repro.schedule import ownership, policy as schedpol, runtime as schedrt
-from repro.sharding.constraints import pmean_stats
+from repro.schedule import (ownership, pipeline as pipemod,
+                            policy as schedpol, runtime as schedrt)
 
 
 class FoofState(NamedTuple):
     running: kvlib.RunningStats
     a_inv: dict
     sched: schedpol.SchedState
+    # pipeline='onestep': {'stats': PipelineState (reduced AAᵀ buffer),
+    # 'refresh': PipelineState (age only — a_inv doubles as the in-flight
+    # inverse buffer)}.  None in sync mode.
+    pipe: Any = None
 
 
 def foof_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
@@ -48,35 +52,49 @@ def foof_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
             plan, _zeros_like_spec(_extract(extras.stats, fields)))
         run = kvlib.init_running(zeros)
         a_inv = {k: jnp.zeros_like(st.a_outer) for k, st in run.stats.items()}
-        pol = schedrt.from_extras(extras).resolve(policy, interval)
+        rt = schedrt.from_extras(extras)
+        pol = rt.resolve(policy, interval)
+        pipe = ({'stats': pipemod.init_state(zeros),
+                 'refresh': pipemod.init_state()}
+                if rt.pipeline == 'onestep' else None)
         return FoofState(running=run, a_inv=a_inv,
-                         sched=schedpol.init_state(pol, run.stats))
+                         sched=schedpol.init_state(pol, run.stats), pipe=pipe)
 
     def update(updates, state: FoofState, params=None, extras: Extras | None = None):
         del params
         rt = schedrt.from_extras(extras)
         comm = comm_exchange.from_extras(extras)
         pol = rt.resolve(policy, interval)
+        pipe = schedrt.resolve_pipe(rt, state.pipe)
         flat = kvlib.flatten_params(updates)
         fresh_flat = _extract(extras.stats, fields)
         plan = _stats_plan(flat, fresh_flat, extras)
-        fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat),
-                            codec=comm.stats, site='stats/foof')
+        fresh, pipe_stats = pipemod.staged_pmean(
+            bucketing.gather_tree(plan, fresh_flat),
+            None if pipe is None else pipe['stats'],
+            codec=comm.stats, site='stats/foof')
         stats, running = kvlib.update_running(state.running, fresh, kf_decay)
 
         refresh, staleness = pol.decide(state.sched, stats)
-        a_inv = schedrt.sharded_refresh(
+        staged = schedrt.sharded_refresh(
             plan, refresh, lambda b, m: _damped_inv(m, gamma),
             {k: st.a_outer for k, st in stats.items()},
             dict(state.a_inv),
             cost=ownership.inverse_cost('left'), shard=rt.shard_refresh,
-            comm=comm, site='refresh/foof')
+            comm=comm, site='refresh/foof',
+            pipe=None if pipe is None else pipe['refresh'])
+        if pipe is None:
+            used = a_inv = staged
+            new_pipe = None
+        else:
+            used, a_inv, pipe_ref = staged
+            new_pipe = {'stats': pipe_stats, 'refresh': pipe_ref}
         sched = schedpol.commit(pol, state.sched, stats, refresh, staleness)
 
-        ops = {k: kvlib.LayerStats(a_outer=a_inv[k]) for k in a_inv}
+        ops = {k: kvlib.LayerStats(a_outer=used[k]) for k in used}
         out = pre.precondition_tree(flat, ops, 'foof_cached', gamma, plan=plan)
         return kvlib.unflatten_params(out), FoofState(
-            running=running, a_inv=a_inv, sched=sched)
+            running=running, a_inv=a_inv, sched=sched, pipe=new_pipe)
 
     return GradientTransformation(init, update)
 

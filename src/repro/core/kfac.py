@@ -14,7 +14,7 @@ inverse application is one batched two-sided contraction per bucket via
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +28,8 @@ from repro.core.eva import _extract, _stats_plan, _zeros_like_spec
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
-from repro.schedule import ownership, policy as schedpol, runtime as schedrt
-from repro.sharding.constraints import pmean_stats
+from repro.schedule import (ownership, pipeline as pipemod,
+                            policy as schedpol, runtime as schedrt)
 
 
 class KfacState(NamedTuple):
@@ -37,6 +37,10 @@ class KfacState(NamedTuple):
     a_inv: dict
     b_inv: dict
     sched: schedpol.SchedState
+    # pipeline='onestep': {'stats': PipelineState (reduced factor buffer),
+    # 'refresh': PipelineState (age only — a_inv/b_inv double as the
+    # in-flight inverse buffer)}.  None in sync mode.
+    pipe: Any = None
 
 
 def _damped_inv(m: jnp.ndarray, gamma) -> jnp.ndarray:
@@ -62,22 +66,29 @@ def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
         run = kvlib.init_running(zeros)
         a_inv = {k: jnp.zeros_like(st.a_outer) for k, st in run.stats.items()}
         b_inv = {k: jnp.zeros_like(st.b_outer) for k, st in run.stats.items()}
-        pol = schedrt.from_extras(extras).resolve(policy, interval)
+        rt = schedrt.from_extras(extras)
+        pol = rt.resolve(policy, interval)
+        pipe = ({'stats': pipemod.init_state(zeros),
+                 'refresh': pipemod.init_state()}
+                if rt.pipeline == 'onestep' else None)
         return KfacState(running=run, a_inv=a_inv, b_inv=b_inv,
-                         sched=schedpol.init_state(pol, run.stats))
+                         sched=schedpol.init_state(pol, run.stats), pipe=pipe)
 
     def update(updates, state: KfacState, params=None, extras: Extras | None = None):
         del params
         rt = schedrt.from_extras(extras)
         comm = comm_exchange.from_extras(extras)
         pol = rt.resolve(policy, interval)
+        pipe = schedrt.resolve_pipe(rt, state.pipe)
         flat = kvlib.flatten_params(updates)
         fresh_flat = _extract(extras.stats, fields)
         plan = _stats_plan(flat, fresh_flat, extras)
         # the O(d²) KF factor reduction is the one stats exchange worth
         # compressing (4-5× gradient volume on the roofline) — codec'd
-        fresh = pmean_stats(bucketing.gather_tree(plan, fresh_flat),
-                            codec=comm.stats, site='stats/kfac')
+        fresh, pipe_stats = pipemod.staged_pmean(
+            bucketing.gather_tree(plan, fresh_flat),
+            None if pipe is None else pipe['stats'],
+            codec=comm.stats, site='stats/kfac')
         stats, running = kvlib.update_running(state.running, fresh, kf_decay)
 
         def one(b, args):
@@ -87,21 +98,29 @@ def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
             return _damped_inv(ao, gamma_r), _damped_inv(bo, gamma_q)
 
         refresh, staleness = pol.decide(state.sched, stats)
-        new = schedrt.sharded_refresh(
+        staged = schedrt.sharded_refresh(
             plan, refresh, one,
             {k: (st.a_outer, st.b_outer) for k, st in stats.items()},
             {k: (state.a_inv[k], state.b_inv[k]) for k in state.a_inv},
             cost=ownership.inverse_cost('both'), shard=rt.shard_refresh,
-            comm=comm, site='refresh/kfac')
+            comm=comm, site='refresh/kfac',
+            pipe=None if pipe is None else pipe['refresh'])
+        if pipe is None:
+            used = new = staged
+            new_pipe = None
+        else:
+            used, new, pipe_ref = staged
+            new_pipe = {'stats': pipe_stats, 'refresh': pipe_ref}
         a_inv = {k: v[0] for k, v in new.items()}
         b_inv = {k: v[1] for k, v in new.items()}
         sched = schedpol.commit(pol, state.sched, stats, refresh, staleness)
 
-        ops = {k: kvlib.LayerStats(a_outer=a_inv[k], b_outer=b_inv[k])
-               for k in a_inv}
+        ops = {k: kvlib.LayerStats(a_outer=used[k][0], b_outer=used[k][1])
+               for k in used}
         out = pre.precondition_tree(flat, ops, 'kfac_cached', gamma, plan=plan)
         return kvlib.unflatten_params(out), KfacState(
-            running=running, a_inv=a_inv, b_inv=b_inv, sched=sched)
+            running=running, a_inv=a_inv, b_inv=b_inv, sched=sched,
+            pipe=new_pipe)
 
     return GradientTransformation(init, update)
 

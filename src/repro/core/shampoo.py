@@ -12,7 +12,7 @@ per bucket via ``precondition_tree``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,8 @@ from repro.core.eva_s import default_precon_predicate
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
-from repro.schedule import ownership, policy as schedpol, runtime as schedrt
+from repro.schedule import (ownership, pipeline as pipemod,
+                            policy as schedpol, runtime as schedrt)
 
 
 class ShampooState(NamedTuple):
@@ -35,6 +36,10 @@ class ShampooState(NamedTuple):
     p_in: dict    # cached (M+γI)^{-1/4}
     p_out: dict
     sched: schedpol.SchedState
+    # pipeline='onestep': {'refresh': PipelineState (age only — p_in/p_out
+    # double as the in-flight root buffer)}.  Shampoo accumulates from local
+    # grads (no stats collective), so only the refresh exchange is staged.
+    pipe: Any = None
 
 
 def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
@@ -53,17 +58,22 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
                 jnp.eye(d_in, dtype=jnp.float32), lead + (d_in, d_in))
             m_out[b.key] = eps_init * jnp.broadcast_to(
                 jnp.eye(d_out, dtype=jnp.float32), lead + (d_out, d_out))
-        pol = schedrt.from_extras(extras).resolve(policy, interval)
+        rt = schedrt.from_extras(extras)
+        pol = rt.resolve(policy, interval)
+        pipe = ({'refresh': pipemod.init_state()}
+                if rt.pipeline == 'onestep' else None)
         return ShampooState(
             m_in=m_in, m_out=m_out,
             p_in=jax.tree_util.tree_map(jnp.zeros_like, m_in),
             p_out=jax.tree_util.tree_map(jnp.zeros_like, m_out),
-            sched=schedpol.init_state(pol, {'m_in': m_in, 'm_out': m_out}))
+            sched=schedpol.init_state(pol, {'m_in': m_in, 'm_out': m_out}),
+            pipe=pipe)
 
     def update(updates, state: ShampooState, params=None, extras: Extras | None = None):
         del params
         rt = schedrt.from_extras(extras)
         pol = rt.resolve(policy, interval)
+        pipe = schedrt.resolve_pipe(rt, state.pipe)
         flat = kvlib.flatten_params(updates)
         plan = bucketing.build_plan(flat, predicate)
         g_b = bucketing.gather(plan, {p: flat[p] for p in plan.paths})
@@ -82,21 +92,29 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
             return (pre._inv_proot_psd(mi, gamma, 0.25),
                     pre._inv_proot_psd(mo, gamma, 0.25))
 
-        new = schedrt.sharded_refresh(
+        staged = schedrt.sharded_refresh(
             plan, refresh, one,
             {k: (m_in[k], m_out[k]) for k in m_in},
             {k: (state.p_in[k], state.p_out[k]) for k in state.p_in},
             cost=ownership.inverse_cost('both'), shard=rt.shard_refresh,
-            comm=comm_exchange.from_extras(extras), site='refresh/shampoo')
+            comm=comm_exchange.from_extras(extras), site='refresh/shampoo',
+            pipe=None if pipe is None else pipe['refresh'])
+        if pipe is None:
+            used = new = staged
+            new_pipe = None
+        else:
+            used, new, pipe_ref = staged
+            new_pipe = {'refresh': pipe_ref}
         p_in = {k: v[0] for k, v in new.items()}
         p_out = {k: v[1] for k, v in new.items()}
         sched = schedpol.commit(pol, state.sched, accum, refresh, staleness)
 
-        ops = {k: kvlib.LayerStats(a_outer=p_in[k], b_outer=p_out[k])
-               for k in p_in}
+        ops = {k: kvlib.LayerStats(a_outer=used[k][0], b_outer=used[k][1])
+               for k in used}
         out = pre.precondition_tree(flat, ops, 'shampoo_cached', gamma, plan=plan)
         return kvlib.unflatten_params(out), ShampooState(
-            m_in=m_in, m_out=m_out, p_in=p_in, p_out=p_out, sched=sched)
+            m_in=m_in, m_out=m_out, p_in=p_in, p_out=p_out, sched=sched,
+            pipe=new_pipe)
 
     return GradientTransformation(init, update)
 

@@ -100,6 +100,11 @@ class Computation:
     name: str
     ops: dict          # name -> Op
     order: list
+    root: Optional[str] = None   # ROOT op name (falls back to last op)
+
+    def root_op(self) -> Optional[str]:
+        return self.root if self.root is not None else (
+            self.order[-1] if self.order else None)
 
 
 def parse_hlo(text: str) -> dict[str, Computation]:
@@ -142,6 +147,8 @@ def parse_hlo(text: str) -> dict[str, Computation]:
         op = Op(name, out_type.strip(), opcode, rest, operands, called)
         cur.ops[name] = op
         cur.order.append(name)
+        if re.match(r'\s*ROOT\s', line):
+            cur.root = name
     return comps
 
 
@@ -320,3 +327,175 @@ def analyze(text: str) -> HloCosts:
             costs.dot_flops_by_comp[cname] = comp_flops
         costs.flops += comp_flops
     return costs
+
+
+# ---------------------------------------------------------------------------
+# Collective/compute overlap (async-pipeline structural check)
+#
+# Whether a collective can overlap compute is a DEPENDENCE question, not a
+# scheduling one: XLA's latency-hiding scheduler (and, on CPU, the thunk
+# runtime) may or may not emit -start/-done async pairs, but a dot that
+# transitively consumes a collective's output can never run before it on any
+# backend.  So the backend-independent check is: forward-reach every dot from
+# every collective output and classify dot FLOPs as dependent (must wait) vs
+# independent (free to overlap).  A synchronous curvature exchange puts the
+# preconditioning contractions squarely in the dependent set; the onestep
+# pipeline's collectives feed only optimizer-state outputs, so its dependent
+# dot FLOPs collapse to ~0 — that collapse is what CI asserts.
+
+
+@dataclasses.dataclass
+class OverlapReport:
+    collective_count: int          # static collective op count (all comps)
+    blocking_collectives: int      # collectives with ≥1 dot in their cone
+    total_dots: int
+    dependent_dots: int
+    dot_flops_total: float         # trip-count-weighted
+    dot_flops_dependent: float
+
+    @property
+    def dot_flops_independent(self) -> float:
+        return self.dot_flops_total - self.dot_flops_dependent
+
+    @property
+    def dependent_fraction(self) -> float:
+        return (self.dot_flops_dependent / self.dot_flops_total
+                if self.dot_flops_total else 0.0)
+
+
+def _param_ops(comp: Computation) -> list:
+    """Parameter op names of a computation, in parameter-index order."""
+    idx = {}
+    for opn, op in comp.ops.items():
+        if op.opcode == 'parameter':
+            m = re.match(r'\s*(\d+)\s*\)', op.rest)
+            if m:
+                idx[int(m.group(1))] = opn
+    return [idx[i] for i in sorted(idx)]
+
+
+def _forward_edges(comps: dict[str, Computation]) -> dict:
+    """Global forward dataflow edges over (comp, op) nodes: within-comp
+    operand→consumer, caller-operand→callee-parameter, callee-root→caller.
+    while loops additionally route the body root back into the body/cond
+    parameters (loop carry).  When a call's operand↔parameter arity doesn't
+    line up (map/reduce/scatter reducers, conditionals), every operand feeds
+    every parameter — an over-approximation, which only ever *overstates*
+    dependence, so an 'independent' verdict stays safe."""
+    edges: dict = {}
+
+    def add(src, dst):
+        edges.setdefault(src, []).append(dst)
+
+    for cname, comp in comps.items():
+        for opn in comp.order:
+            op = comp.ops[opn]
+            for o in op.operands:
+                if o in comp.ops and o != opn:
+                    add((cname, o), (cname, opn))
+            if not op.called:
+                continue
+            callees = [c for c in op.called if c in comps]
+            if op.opcode == 'while':
+                for c in callees:
+                    params = _param_ops(comps[c])
+                    for o in op.operands:
+                        if o in comp.ops:
+                            for p in params:
+                                add((cname, o), (c, p))
+                # loop carry: the body root re-enters every iteration
+                body = next((c for c in callees
+                             if re.search(r'body=%?' + re.escape(c), op.rest)),
+                            None)
+                for c in callees:
+                    root = comps[c].root_op()
+                    if root is not None:
+                        add((c, root), (cname, opn))
+                if body is not None:
+                    broot = comps[body].root_op()
+                    if broot is not None:
+                        for c in callees:
+                            for p in _param_ops(comps[c]):
+                                add((body, broot), (c, p))
+            else:
+                for c in callees:
+                    params = _param_ops(comps[c])
+                    srcs = [o for o in op.operands if o in comp.ops]
+                    if len(callees) == 1 and len(srcs) == len(params):
+                        for o, p in zip(srcs, params):
+                            add((cname, o), (c, p))
+                    else:
+                        for o in srcs:
+                            for p in params:
+                                add((cname, o), (c, p))
+                    root = comps[c].root_op()
+                    if root is not None:
+                        add((c, root), (cname, opn))
+    return edges
+
+
+def _is_collective(op: Op) -> bool:
+    # matches the async variants too ('all-reduce-start', '-done')
+    return any(op.opcode.startswith(c) for c in COLLECTIVE_OPS)
+
+
+def _reach(edges: dict, sources) -> set:
+    reached = set(sources)
+    frontier = list(sources)
+    while frontier:
+        node = frontier.pop()
+        for nxt in edges.get(node, ()):
+            if nxt not in reached:
+                reached.add(nxt)
+                frontier.append(nxt)
+    return reached
+
+
+def collective_overlap(text: str) -> OverlapReport:
+    """Classify the module's dot FLOPs by whether they transitively depend
+    on any collective's output (see module note above).
+
+    ``blocking_collectives`` additionally counts, per collective, whether
+    ANY dot sits in that collective's own forward cone.  The aggregate
+    dependent fraction cannot separate a gradient all-reduce (whose
+    downstream dots are the whole update — unavoidable in data parallelism)
+    from the curvature exchanges this check targets; the per-collective
+    count can: pipelining the curvature exchange moves exactly those
+    collectives out of the blocking set while the gradient reduction stays
+    in it."""
+    comps = parse_hlo(text)
+    entry = _entry_name(comps, text)
+    mult = computation_multipliers(comps, entry)
+    edges = _forward_edges(comps)
+
+    sources = [(cname, opn) for cname, comp in comps.items()
+               for opn, op in comp.ops.items() if _is_collective(op)]
+    reached = _reach(edges, sources)
+
+    dots = {}
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for opn in comp.order:
+            op = comp.ops[opn]
+            if op.opcode == 'dot':
+                dots[(cname, opn)] = _dot_flops(comp, op) * m
+
+    # a collective blocks iff some dot is forward-reachable from it ⇔ it is
+    # backward-reachable from some dot: one reverse BFS instead of |sources|
+    rev: dict = {}
+    for src, dsts in edges.items():
+        for d in dsts:
+            rev.setdefault(d, []).append(src)
+    reaches_dot = _reach(rev, list(dots))
+    blocking = sum(1 for s in sources if s in reaches_dot)
+
+    rep = OverlapReport(collective_count=len(sources),
+                        blocking_collectives=blocking,
+                        total_dots=len(dots), dependent_dots=0,
+                        dot_flops_total=sum(dots.values()),
+                        dot_flops_dependent=0.0)
+    for d, fl in dots.items():
+        if d in reached:
+            rep.dependent_dots += 1
+            rep.dot_flops_dependent += fl
+    return rep

@@ -8,6 +8,8 @@ recomputation runs.  Three pieces:
                   (``every_k`` / ``warmup_then_k`` / ``adaptive``),
 * ``ownership`` — deterministic worker-sharded bucket-item assignment
                   (inverse FLOPs scale 1/W with world size),
+* ``pipeline``  — the double-buffered one-step-stale exchange pipeline
+                  (``PipelineState`` buffers, ``pipeline='onestep'``),
 * ``runtime``   — the ``RefreshRuntime`` façade the optimizers and the
                   train step talk to.
 """
@@ -16,7 +18,9 @@ from repro.schedule.policy import (SchedState, RefreshPolicy, adaptive,
                                    warmup_then_k)
 from repro.schedule.ownership import (assign_owners, describe_ownership,
                                       inverse_cost, world_and_rank)
-from repro.schedule.runtime import (RefreshRuntime, from_extras,
+from repro.schedule.pipeline import (PipelineState, pipe_entries,
+                                     pipeline_metrics, staged_pmean)
+from repro.schedule.runtime import (RefreshRuntime, from_extras, resolve_pipe,
                                     sched_states, schedule_metrics,
                                     sharded_refresh)
 
@@ -24,6 +28,7 @@ __all__ = [
     'SchedState', 'RefreshPolicy', 'every_k', 'warmup_then_k', 'adaptive',
     'named_policy', 'init_state', 'commit',
     'assign_owners', 'describe_ownership', 'inverse_cost', 'world_and_rank',
-    'RefreshRuntime', 'from_extras', 'sched_states', 'schedule_metrics',
-    'sharded_refresh',
+    'PipelineState', 'pipe_entries', 'pipeline_metrics', 'staged_pmean',
+    'RefreshRuntime', 'from_extras', 'resolve_pipe', 'sched_states',
+    'schedule_metrics', 'sharded_refresh',
 ]

@@ -1,0 +1,144 @@
+"""Double-buffered one-step-stale curvature pipeline (MKOR-style async Eva).
+
+The synchronous exchange data flow is "call collective, block, use the
+result this step".  That keeps every ``pmean_stats`` factor reduction and
+every ``sharded_refresh`` owned-slice gather inside the critical path of
+the step that produced it — the roofline's 3-5.5× gradient-volume factor
+traffic all sits between the backward matmuls and the parameter update.
+
+``pipeline='onestep'`` (a knob on ``schedule.runtime.RefreshRuntime``)
+rewires the optimizers through the staged issue/collect API
+(``repro.comm.exchange`` / ``sharding.constraints``) so step *t* **applies**
+the statistics / refreshed inverses exchanged during step *t−1* while step
+*t*'s own exchange is merely *issued*: its result feeds only the optimizer
+STATE outputs, never this step's preconditioning contractions, so XLA's
+async collectives / latency-hiding scheduler are free to overlap it with
+compute (``launch/hlo_analysis.collective_overlap`` checks exactly this
+dependence structure).  The price is one step of staleness — the same
+quantity the refresh policies already model and the trainer already logs.
+
+State carried per pipelined exchange site is one :class:`PipelineState`:
+
+* ``inflight`` — the value exchanged this step, applied next step.  For the
+  statistics sites this is the reduced fresh-stat tree (one extra stats
+  copy in optimizer state); for the refresh sites it is ``None`` — the
+  optimizer's own cache fields (``a_inv`` …) double as the buffer because
+  "apply the old cache, then store the refreshed one" needs no second copy.
+* ``age`` — staleness (in steps) the buffer will have when applied.  0 at
+  init (cold zeros; the eva-family snapshot and the inverse caches already
+  start from zeros, so step 0 just preconditions with the same zeros the
+  sync path would have produced pre-refresh).
+
+Cold start is *zeros*, deliberately: a ``where(primed, buffered, fresh)``
+fallback would keep the fresh collective inside the preconditioning
+dependence cone on EVERY step (both select arms are materialized) and kill
+the overlap this module exists to create.
+
+Exact semantics (tested atol=0 in ``tests/test_pipeline.py``): for the
+stats-only optimizers (eva, eva_f) a ``onestep`` run is bit-identical to a
+``sync`` run fed the one-step-shifted stats stream ``[0, s_0, s_1, …]``;
+for the interval methods (kfac, foof, shampoo) the reference is the
+hand-rolled double-buffered loop.  eva_s performs no exchange at all, so
+for it ``onestep`` ≡ ``sync`` trivially (documented no-op).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class PipelineState(NamedTuple):
+    """One pipelined exchange site's carried buffer (a pytree in optimizer
+    state; ``inflight=None`` for sites whose buffer is the optimizer's own
+    cache fields)."""
+    inflight: Any
+    age: jnp.ndarray
+
+
+def init_state(template: Any = None) -> PipelineState:
+    """Cold pipeline slot: a zeros buffer shaped like ``template`` (or no
+    buffer at all for refresh sites) at age 0."""
+    buf = (jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, x.dtype),
+                                  template)
+           if template is not None else None)
+    return PipelineState(inflight=buf, age=jnp.zeros((), jnp.int32))
+
+
+def stage(pipe: PipelineState, fresh: Any) -> tuple[Any, PipelineState]:
+    """Swap buffers at an every-step exchange site: apply what was exchanged
+    last step, put this step's ``fresh`` in flight (applied next step at
+    age 1)."""
+    return pipe.inflight, PipelineState(inflight=fresh,
+                                        age=jnp.ones((), jnp.int32))
+
+
+def tick(pipe: PipelineState, refresh: jnp.ndarray) -> PipelineState:
+    """Advance a refresh-site slot whose buffer lives in the optimizer's
+    cache fields: age resets to 1 when the gated recompute fired (fresh
+    inverses now in flight), otherwise the in-flight value just got one
+    step older."""
+    return PipelineState(
+        inflight=pipe.inflight,
+        age=jnp.where(refresh, jnp.ones((), jnp.int32), pipe.age + 1))
+
+
+def staged_pmean(tree: Any, pipe: Optional[PipelineState], codec=None,
+                 site: Optional[str] = None
+                 ) -> tuple[Any, Optional[PipelineState]]:
+    """The staged statistics reduction every optimizer calls.
+
+    Issues this step's mean all-reduce and collects it (decode + divide are
+    local math — the collective output itself stays out of any downstream
+    compute the caller does with the *applied* tree).  ``pipe=None`` is the
+    sync path: the freshly reduced tree is applied immediately —
+    bit-identical to the legacy ``sharding.constraints.pmean_stats`` (the
+    issue/collect composition is op-for-op the same sequence).
+    """
+    from repro.sharding import constraints
+
+    fresh = constraints.collect_pmean_stats(
+        constraints.issue_pmean_stats(tree, codec=codec, site=site))
+    if pipe is None:
+        return fresh, None
+    return stage(pipe, fresh)
+
+
+# ---------------------------------------------------------------------------
+# Observability
+
+
+def pipe_entries(opt_state: Any) -> list[tuple[str, PipelineState]]:
+    """All (site_key, PipelineState) pairs in an optimizer-state pytree —
+    static Python walk, usable on traced and concrete states.  The site key
+    is the nearest enclosing dict key ('stats' / 'refresh' by convention)."""
+    found: list[tuple[str, PipelineState]] = []
+
+    def walk(x, key=''):
+        if isinstance(x, PipelineState):
+            found.append((key, x))
+            return
+        if isinstance(x, dict):
+            for k, v in x.items():
+                walk(v, k if isinstance(k, str) else key)
+        elif isinstance(x, (list, tuple)):
+            for v in x:
+                walk(v, key)
+
+    walk(opt_state)
+    return found
+
+
+def pipeline_metrics(opt_state: Any) -> dict[str, jnp.ndarray]:
+    """{'pipeline_lag', 'pipeline_lag/<site>'} — realized staleness (steps)
+    of the buffer each pipelined exchange site will apply next; {} when the
+    state carries no pipeline (sync mode)."""
+    entries = pipe_entries(opt_state)
+    if not entries:
+        return {}
+    out = {'pipeline_lag': jnp.max(jnp.stack([p.age for _, p in entries]))}
+    for key in sorted({k for k, _ in entries if k}):
+        out[f'pipeline_lag/{key}'] = jnp.max(
+            jnp.stack([p.age for k2, p in entries if k2 == key]))
+    return out

@@ -39,6 +39,7 @@ from repro.comm import exchange, metrics
 from repro.comm import codec as exchange_codec
 from repro.core.bucketing import Bucket, BucketPlan
 from repro.schedule import ownership
+from repro.schedule import pipeline as pipeline_mod
 from repro.schedule import policy as policy_mod
 from repro.sharding import compat
 from repro.sharding.constraints import psum_tree
@@ -55,10 +56,23 @@ class RefreshRuntime:
       shard_refresh: gate worker-sharded ownership; turning it off makes
         every worker recompute everything (the redundant pre-runtime
         behavior, kept for A/B benchmarks).
+      pipeline: 'sync' (default — every exchange result is applied in the
+        step that issued it, the exact legacy behavior) or 'onestep' (the
+        double-buffered pipeline: step t applies the stats / refreshed
+        inverses exchanged at t−1 so step t's collectives can overlap its
+        compute; see ``repro.schedule.pipeline``).  Must match between
+        ``init_opt_state`` and the train step — 'onestep' allocates
+        pipeline buffers in optimizer state.
     """
 
     policy: Optional[policy_mod.RefreshPolicy] = None
     shard_refresh: bool = True
+    pipeline: str = 'sync'
+
+    def __post_init__(self):
+        if self.pipeline not in ('sync', 'onestep'):
+            raise ValueError("pipeline must be 'sync' or 'onestep', "
+                             f'got {self.pipeline!r}')
 
     def resolve(self, local: Optional[policy_mod.RefreshPolicy],
                 interval: int = 1) -> policy_mod.RefreshPolicy:
@@ -82,6 +96,25 @@ def from_extras(extras) -> RefreshRuntime:
     return rt if rt is not None else _DEFAULT
 
 
+def resolve_pipe(rt: RefreshRuntime, state_pipe):
+    """The pipe dict an optimizer update should thread this step (None in
+    sync mode), with a static consistency check: the pipeline mode is baked
+    into the state structure at init, so init and update must agree."""
+    if rt.pipeline == 'onestep':
+        if state_pipe is None:
+            raise ValueError(
+                "pipeline='onestep' but the optimizer state has no pipeline "
+                'buffers — pass the same RefreshRuntime(pipeline=...) to '
+                'init_opt_state and the train step')
+        return state_pipe
+    if state_pipe is not None:
+        raise ValueError(
+            "pipeline='sync' but the optimizer state carries pipeline "
+            'buffers — pass the same RefreshRuntime(pipeline=...) to '
+            'init_opt_state and the train step')
+    return None
+
+
 # ---------------------------------------------------------------------------
 # Gated, worker-sharded refresh
 
@@ -92,7 +125,8 @@ def sharded_refresh(plan: BucketPlan, refresh: jnp.ndarray,
                     *, cost: Callable[[Bucket], float],
                     shard: bool = True,
                     comm: Optional[exchange.ExchangeConfig] = None,
-                    site: str = 'refresh') -> dict[str, Any]:
+                    site: str = 'refresh',
+                    pipe: Optional[pipeline_mod.PipelineState] = None):
     """Recompute cached per-bucket values under a refresh decision.
 
     Args:
@@ -114,9 +148,21 @@ def sharded_refresh(plan: BucketPlan, refresh: jnp.ndarray,
         all-gather (default; per-worker traffic ~1/W of the stack) or the
         legacy full-stack zero-padded psum.
       site: call-site label for the ``repro.comm.metrics`` byte counters.
+      pipe: ``None`` (sync — the refreshed values are applied in this step,
+        the legacy behavior and return shape) or this site's
+        ``PipelineState`` (one-step pipeline).  The cond/exchange graph is
+        IDENTICAL in both modes; what changes is the consumer: pipelined
+        callers precondition with the returned ``applied`` caches (the
+        values refreshed in an earlier step — ``old_b``, which doubles as
+        the in-flight buffer, so no second cache copy exists) and store the
+        fresh result, keeping this step's exchange out of this step's
+        compute cone.
 
     Returns {bucket_key: refreshed stacked values} with ``old_b``'s
-    structure.
+    structure when ``pipe is None``; otherwise the staged triple
+    ``(applied, fresh, new_pipe)`` where ``applied`` is ``old_b`` (what
+    this step preconditions with) and ``fresh`` is the cond output (what
+    the caller must store for the next step).
     """
     axes = ownership.data_axes_in_scope() if shard else ()
     world, rank = ownership.world_and_rank(axes) if shard else (1, None)
@@ -203,7 +249,11 @@ def sharded_refresh(plan: BucketPlan, refresh: jnp.ndarray,
     def keep(_):
         return {b.key: old_b[b.key] for b in plan.buckets}
 
-    return jax.lax.cond(refresh, recompute, keep, operand=None)
+    fresh = jax.lax.cond(refresh, recompute, keep, operand=None)
+    if pipe is None:
+        return fresh
+    applied = {b.key: old_b[b.key] for b in plan.buckets}
+    return applied, fresh, pipeline_mod.tick(pipe, refresh)
 
 
 # ---------------------------------------------------------------------------

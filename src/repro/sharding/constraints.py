@@ -64,6 +64,52 @@ def data_axes_in_scope() -> tuple[str, ...]:
     return tuple(a for a in ('pod', 'data') if a in bound)
 
 
+class _InFlightPmean:
+    """An issued-but-not-collected statistics reduction (one of: the raw
+    tree when no data axis is bound, a dtype-preserving psum'd tree plus
+    its static divisor, or a ``repro.comm`` :class:`InFlightMean`).  Lives
+    within one trace — the pipeline stores the *collected* tree."""
+
+    __slots__ = ('tree', 'n', 'kind')
+
+    def __init__(self, tree, n, kind):
+        self.tree = tree
+        self.n = n
+        self.kind = kind   # 'raw' | 'passthrough' | 'codec'
+
+
+def issue_pmean_stats(tree, codec=None, site: Optional[str] = None
+                      ) -> _InFlightPmean:
+    """Collective half of :func:`pmean_stats`: fire the psums (or the
+    codec'd all-reduce issue) over the live data-parallel axes.  The
+    passthrough divisor is the trace-time axis size — exactly what
+    ``lax.pmean`` divides by internally (``psum`` of a non-traced 1), so
+    composing with :func:`collect_pmean_stats` stays bit-exact and
+    dtype-preserving."""
+    axes = data_axes_in_scope()
+    if not axes or tree is None:
+        return _InFlightPmean(tree, None, 'raw')
+    from repro.comm import exchange, get_codec
+    arg = axes if len(axes) > 1 else axes[0]
+    if get_codec(codec).passthrough:
+        return _InFlightPmean(
+            jax.tree_util.tree_map(lambda x: jax.lax.psum(x, arg), tree),
+            jax.lax.psum(1, arg), 'passthrough')
+    return _InFlightPmean(
+        exchange.issue_allreduce_mean_tree(tree, codec=codec, axes=axes,
+                                           site=site), None, 'codec')
+
+
+def collect_pmean_stats(fl: _InFlightPmean):
+    """Local finishing half of :func:`pmean_stats` (divide / decode)."""
+    if fl.kind == 'raw':
+        return fl.tree
+    if fl.kind == 'passthrough':
+        return jax.tree_util.tree_map(lambda v: v / fl.n, fl.tree)
+    from repro.comm import exchange
+    return exchange.collect_allreduce_mean_tree(fl.tree)[0]
+
+
 def pmean_stats(tree, codec=None, site: Optional[str] = None):
     """psum-average a pytree of per-bucket KV/KF statistics across the live
     data-parallel axes, making Eva's statistics batch-global as in the
@@ -83,18 +129,13 @@ def pmean_stats(tree, codec=None, site: Optional[str] = None):
     composing it with an outer explicit reduction (e.g.
     ``train/compression.py``) is safe; the bf16/int8 paths re-quantize on
     every application and must run exactly once per fresh statistic.
+
+    Synchronous composition of the staged halves (issue the collectives,
+    finish locally) — see ``repro.schedule.pipeline`` for the one-step
+    staged caller.
     """
-    axes = data_axes_in_scope()
-    if not axes or tree is None:
-        return tree
-    from repro.comm import exchange, get_codec
-    if get_codec(codec).passthrough:
-        return jax.tree_util.tree_map(
-            lambda x: jax.lax.pmean(x, axes if len(axes) > 1 else axes[0]),
-            tree)
-    reduced, _, _ = exchange.allreduce_mean_tree(tree, codec=codec, axes=axes,
-                                                 site=site)
-    return reduced
+    return collect_pmean_stats(issue_pmean_stats(tree, codec=codec,
+                                                 site=site))
 
 
 def psum_tree(tree, axes: Optional[tuple[str, ...]] = None):

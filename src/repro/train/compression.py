@@ -27,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 from repro.comm import exchange
 from repro.core import kv as kvlib
 from repro.core.transform import Extras, apply_updates
+from repro.schedule import pipeline as pipemod
 from repro.sharding import compat
 from repro.train.step import _plan_for_stats, compute_grads_and_stats
 
@@ -48,7 +49,8 @@ def quantize_allreduce(g: jnp.ndarray, err: jnp.ndarray,
 
 def make_dp_train_step(model, opt, capture: kvlib.CaptureConfig, mesh,
                        compress: bool = True, taps_fn=None,
-                       comm: Optional[exchange.ExchangeConfig] = None):
+                       comm: Optional[exchange.ExchangeConfig] = None,
+                       sched=None):
     """Explicit data-parallel train step via shard_map over 'data'.
 
     Params/opt-state replicated; the batch is split over 'data'; gradients
@@ -59,6 +61,11 @@ def make_dp_train_step(model, opt, capture: kvlib.CaptureConfig, mesh,
     ``Extras.comm`` so the refresh exchange uses it too.  The step's
     metrics include ``comm_saturation`` — the int8 codec's overflow
     fraction, 0.0 by construction under the global max scale.
+
+    ``sched`` (a ``RefreshRuntime``) threads through ``Extras.sched`` —
+    pass the same one given to ``init_opt_state``; with
+    ``pipeline='onestep'`` the optimizer's curvature exchanges double-buffer
+    and the metrics gain the realized ``pipeline_lag`` per site.
 
     Returns (step_fn, init_error_fn)."""
     if comm is not None:
@@ -93,10 +100,12 @@ def make_dp_train_step(model, opt, capture: kvlib.CaptureConfig, mesh,
         updates, new_opt = opt.update(
             grads, opt_state, params=params,
             extras=Extras(stats=stats, loss=loss,
-                          plan=_plan_for_stats(grads, stats), comm=inner))
+                          plan=_plan_for_stats(grads, stats), comm=inner,
+                          sched=sched))
         new_params = apply_updates(params, updates)
-        return new_params, new_opt, new_err, {
-            'loss': loss, 'comm_saturation': info['saturation']}
+        metrics = {'loss': loss, 'comm_saturation': info['saturation']}
+        metrics.update(pipemod.pipeline_metrics(new_opt))
+        return new_params, new_opt, new_err, metrics
 
     in_specs = (P(), P(), P(), P('data'))
     out_specs = (P(), P(), P(), P())

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core.transform import Extras, GradientTransformation, apply_updates
-from repro.schedule import runtime as schedrt
+from repro.schedule import pipeline as pipemod, runtime as schedrt
 
 
 def _plan_for_stats(params_or_grads, stats) -> Optional[bucketing.BucketPlan]:
@@ -146,6 +146,8 @@ def make_train_step(model, opt: GradientTransformation,
         # refresh-runtime observability: cumulative refreshes / staleness of
         # every scheduled transform in the state ({} for unscheduled opts)
         metrics.update(schedrt.schedule_metrics(new_opt_state))
+        # realized pipeline staleness per exchange site ({} in sync mode)
+        metrics.update(pipemod.pipeline_metrics(new_opt_state))
         return new_params, new_opt_state, metrics
 
     return train_step

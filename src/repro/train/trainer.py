@@ -204,6 +204,13 @@ class Trainer:
                         rec['refresh_since'] = int(metrics['refresh_since'])
                         sched_line = (f" refreshes {rec['refreshes']}"
                                       f" staleness {rec['staleness']:.3g}")
+                    if 'pipeline_lag' in metrics:
+                        # realized double-buffer staleness (steps since the
+                        # applied buffer was exchanged) — overall + per site
+                        for k, v in metrics.items():
+                            if k.startswith('pipeline_lag'):
+                                rec[k] = int(v)
+                        sched_line += f" lag {rec['pipeline_lag']}"
                     # cumulative exchanged bytes, from THIS trainer's comm
                     # sites: per-step sites (grads/stats) fire every
                     # step, refresh sites once per realized refresh

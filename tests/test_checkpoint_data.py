@@ -119,7 +119,8 @@ def test_ae_stream_range():
 # counters) and adaptive-policy state (drift snapshot).
 
 
-def _sched_train(name, steps, tmp_path=None, save_at=None, **opt_kw):
+def _sched_train(name, steps, tmp_path=None, save_at=None, sched=None,
+                 **opt_kw):
     import jax.numpy as jnp
 
     from repro.core.registry import make_optimizer
@@ -135,8 +136,9 @@ def _sched_train(name, steps, tmp_path=None, save_at=None, **opt_kw):
     taps_fn = (lambda p: model.make_taps(32, capture)) \
         if capture.needs_taps else None
     state = init_opt_state(model, opt, capture, params, stream.batch_at(0),
-                           taps_fn=taps_fn)
-    step = jax.jit(make_train_step(model, opt, capture, taps_fn=taps_fn))
+                           taps_fn=taps_fn, sched=sched)
+    step = jax.jit(make_train_step(model, opt, capture, taps_fn=taps_fn,
+                                   sched=sched))
     for i in range(steps):
         if save_at is not None and i == save_at:
             ckpt.save(tmp_path, i, {'params': params, 'opt_state': state},
@@ -172,5 +174,24 @@ def test_refresh_state_resume_bit_exact(tmp_path, name, kw, save_at):
     p_ref, s_ref = _sched_train(name, steps, **kw)
     p_res, s_res = _sched_train(name, steps, tmp_path=tmp_path,
                                 save_at=save_at, **kw)
+    _assert_bit_equal(p_ref, p_res)
+    _assert_bit_equal(s_ref, s_res)
+
+
+@pytest.mark.parametrize('name,kw,save_at', [
+    # onestep pipeline: the checkpoint lands at a step boundary with a
+    # buffer IN FLIGHT (the stats exchanged at step save_at-1 not yet
+    # applied, a mid-interval inverse age) — PipelineState must roundtrip
+    ('kfac', {'interval': 3}, 4),
+    ('eva', {}, 4),
+])
+def test_pipeline_state_resume_bit_exact(tmp_path, name, kw, save_at):
+    from repro.schedule.runtime import RefreshRuntime
+
+    rt = RefreshRuntime(pipeline='onestep')
+    steps = 7
+    p_ref, s_ref = _sched_train(name, steps, sched=rt, **kw)
+    p_res, s_res = _sched_train(name, steps, tmp_path=tmp_path,
+                                save_at=save_at, sched=rt, **kw)
     _assert_bit_equal(p_ref, p_res)
     _assert_bit_equal(s_ref, s_res)

@@ -258,7 +258,7 @@ def _legacy_eva_s_run(steps, kv_decay=0.9):
 # Scheduled runs
 
 
-def _scheduled_run(method, steps, **kw):
+def _scheduled_run(method, steps, sched=None, **kw):
     maker = {
         'eva': lambda: eva_preconditioner(GAMMA, 0.9, **kw),
         'eva_f': lambda: eva_f_preconditioner(GAMMA, 0.9, **kw),
@@ -270,11 +270,13 @@ def _scheduled_run(method, steps, **kw):
     opt = maker()
     params = _params()
     needs_stats = method in ('eva', 'eva_f', 'foof', 'kfac')
-    extras0 = Extras(stats=_capture_stats(0)) if needs_stats else Extras()
+    extras0 = Extras(stats=_capture_stats(0) if needs_stats else None,
+                     sched=sched)
     state = opt.init(params, extras0)
     outs = []
     for t in range(steps):
-        ex = Extras(stats=_capture_stats(t)) if needs_stats else Extras()
+        ex = Extras(stats=_capture_stats(t) if needs_stats else None,
+                    sched=sched)
         out, state = opt.update(_grads(t), state, extras=ex)
         outs.append(kvlib.flatten_params(out))
     return outs, state
@@ -303,6 +305,23 @@ def test_every_1_bit_identical_to_legacy(method):
     outs, _ = _scheduled_run(method, STEPS, policy=every_k(1))
     for t in range(STEPS):
         _assert_trees_equal(outs[t], ref[t], msg=f'{method} step {t}')
+
+
+@pytest.mark.parametrize('method', ALL_METHODS)
+def test_pipeline_sync_bit_identical_to_legacy(method):
+    """An explicit ``RefreshRuntime(pipeline='sync')`` is the staged
+    issue/collect composition of every exchange — proven atol=0 against the
+    pre-pipeline legacy references, state included (``pipe=None`` adds no
+    leaves, so the state trees match the default-runtime run exactly)."""
+    ref = LEGACY[method](1)
+    sync = schedrt.RefreshRuntime(pipeline='sync')
+    outs, state = _scheduled_run(method, STEPS, policy=every_k(1), sched=sync)
+    for t in range(STEPS):
+        _assert_trees_equal(outs[t], ref[t], msg=f'{method} step {t}')
+    _, state_default = _scheduled_run(method, STEPS, policy=every_k(1))
+    _assert_trees_equal(state, state_default, msg=f'{method} state')
+    assert (jax.tree_util.tree_structure(state)
+            == jax.tree_util.tree_structure(state_default))
 
 
 @pytest.mark.parametrize('method', INTERVAL_METHODS)
