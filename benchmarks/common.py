@@ -22,10 +22,17 @@ def write_json(path: str) -> None:
     """Dump every row emitted so far to ``path`` as JSON — the BENCH_*.json
     artifacts the CI benchmark-smoke job uploads, so the perf trajectory is
     recorded per commit instead of scrolling away in logs.  The ``derived``
-    key=value pairs are split out so downstream tooling can diff them."""
+    key=value pairs are split out so downstream tooling can diff them.
+
+    Rows are typed ``bench`` records in the unified telemetry schema
+    (``repro.obs.events``) — supersets of the original
+    name/us_per_call/derived shape, schema-validated before writing so a
+    malformed row fails the benchmark, not the downstream report."""
+    from repro.obs import events as obs_events
     rows = []
     for name, us, derived in ROWS:
-        rec = {'name': name, 'us_per_call': us, 'derived': derived}
+        rec = {'event': 'bench', 'v': obs_events.SCHEMA_VERSION,
+               'name': name, 'us_per_call': us, 'derived': derived}
         kv = {}
         for part in derived.split(';'):
             if '=' in part:
@@ -33,6 +40,9 @@ def write_json(path: str) -> None:
                 kv[k] = v
         if kv:
             rec['fields'] = kv
+        errs = obs_events.validate_record(rec)
+        if errs:
+            raise obs_events.SchemaError(f'{name}: ' + '; '.join(errs))
         rows.append(rec)
     Path(path).write_text(json.dumps(rows, indent=2) + '\n')
     print(f'# wrote {path} ({len(rows)} rows)')

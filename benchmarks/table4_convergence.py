@@ -22,6 +22,7 @@ import numpy as np
 
 from benchmarks.common import classifier_accuracy, emit, time_fn, write_json
 from repro.configs.registry import demo_lm
+from repro.core import kv as kvlib
 from repro.core.registry import make_optimizer
 from repro.data.synthetic import ClassStream, LMStream
 from repro.models import build_model
@@ -87,11 +88,20 @@ def run_kappa_sweep(methods: list[str], steps: int = 80,
     for name in methods:
         model = build_model(cfg)
         params0 = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+        paths = set(model.precon_paths()) & \
+            set(kvlib.flatten_params(params0))
         for kappa in KAPPA_GRID:
             opt, capture = make_optimizer(name, lr=LRS[name], kl_kappa=kappa)
+            # K-FAC: full z-shaped taps, lead-dims intact so the stacked
+            # b_outer keeps the scan path dim (the old vector-tap fallback
+            # collapsed it and the refresh cond branches disagreed)
+            taps_fn = (lambda p: kvlib.make_full_taps(
+                p, paths, (data.batch, data.seq_len))) \
+                if capture.b == 'outer' else None
             state = init_opt_state(model, opt, capture, params0,
-                                   data.batch_at(0))
-            step = jax.jit(make_train_step(model, opt, capture))
+                                   data.batch_at(0), taps_fn=taps_fn)
+            step = jax.jit(make_train_step(model, opt, capture,
+                                           taps_fn=taps_fn))
             p, losses = params0, []
             for i in range(steps):
                 p, state, m = step(p, state, data.batch_at(i))
@@ -113,9 +123,8 @@ def main() -> None:
                     help='iteration budget per --kappa-sweep cell')
     ap.add_argument('--methods', default=None,
                     help='comma-separated method filter for --kappa-sweep '
-                         '(default: eva — kfac cannot run the base-scale '
-                         'demo LM yet: its init-time b_outer stats drop '
-                         'the scan path dim, see ROADMAP carried items)')
+                         '(default: eva; kfac runs too — full taps are '
+                         'built automatically for b=outer captures)')
     ap.add_argument('--json', default=None, metavar='PATH',
                     help='also write the emitted rows to PATH as JSON')
     args = ap.parse_args()

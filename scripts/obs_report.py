@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""Telemetry run-analysis CLI — thin wrapper over ``repro.obs.report``.
+
+    PYTHONPATH=src python scripts/obs_report.py runs/a/metrics.jsonl
+    PYTHONPATH=src python scripts/obs_report.py --validate BENCH_*.json
+    PYTHONPATH=src python scripts/obs_report.py --diff a.jsonl b.jsonl \\
+        --max-regress 25
+
+Exit codes: 0 ok · 1 schema-validation errors · 2 gated perf regression.
+"""
+import sys
+
+from repro.obs import report
+
+if __name__ == '__main__':
+    sys.exit(report.main(sys.argv[1:]))

@@ -14,24 +14,69 @@ either convention.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
-from typing import Any, Optional
+from typing import Any, Iterator, Optional
 
 _LOCK = threading.Lock()
 _SITES: dict[str, dict[str, Any]] = {}
+_SCOPES: list['Scope'] = []
+
+
+class Scope:
+    """A run-scoped view of the counters (see ``scope()``).
+
+    While active, every ``record()`` lands here *in addition to* the
+    process-global table, so one trainer/benchmark can attribute sites to
+    itself without resetting (and thus destroying) another run's records —
+    this replaces the trainer's old trace-count-baselining workaround.
+    """
+
+    def __init__(self) -> None:
+        self.sites: dict[str, dict[str, Any]] = {}
+
+    def snapshot(self) -> dict[str, dict[str, Any]]:
+        with _LOCK:
+            return {k: dict(v) for k, v in self.sites.items()}
+
+
+def push_scope() -> Scope:
+    """Activate a new scope (caller must ``pop_scope`` it)."""
+    s = Scope()
+    with _LOCK:
+        _SCOPES.append(s)
+    return s
+
+
+def pop_scope(s: Scope) -> None:
+    with _LOCK:
+        if s in _SCOPES:
+            _SCOPES.remove(s)
+
+
+@contextlib.contextmanager
+def scope() -> Iterator[Scope]:
+    """Context-managed run-scoped counter view: sites recorded (= traced)
+    while the scope is active."""
+    s = push_scope()
+    try:
+        yield s
+    finally:
+        pop_scope(s)
 
 
 def record(site: str, *, bytes_per_call: int, codec: str, mode: str,
            extra: Optional[dict] = None) -> None:
     """Record one call-site's per-call contributed bytes (trace time)."""
     with _LOCK:
-        rec = _SITES.setdefault(site, {'traces': 0})
-        rec['traces'] += 1
-        rec['bytes_per_call'] = int(bytes_per_call)
-        rec['codec'] = codec
-        rec['mode'] = mode
-        if extra:
-            rec.update(extra)
+        for table in [_SITES] + [s.sites for s in _SCOPES]:
+            rec = table.setdefault(site, {'traces': 0})
+            rec['traces'] += 1
+            rec['bytes_per_call'] = int(bytes_per_call)
+            rec['codec'] = codec
+            rec['mode'] = mode
+            if extra:
+                rec.update(extra)
 
 
 def snapshot() -> dict[str, dict[str, Any]]:

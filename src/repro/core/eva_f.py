@@ -60,7 +60,7 @@ def eva_f_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
         plan = _stats_plan(flat, fresh_flat, extras)
         fresh, pipe_stats = pipemod.staged_pmean(
             bucketing.gather_tree(plan, fresh_flat),
-            None if pipe is None else pipe['stats'])
+            None if pipe is None else pipe['stats'], site='stats/eva_f')
         stats, running = kvlib.update_running(state.running, fresh, kv_decay)
         used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
                                                 state.cached)

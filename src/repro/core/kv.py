@@ -160,6 +160,30 @@ def make_vector_taps(params: Any, precon_paths: set[str]) -> dict[str, jnp.ndarr
     return taps
 
 
+def full_tap_shape(w_shape: tuple[int, ...],
+                   token_shape: tuple[int, ...]) -> tuple[int, ...]:
+    """Full (z-shaped) tap for a weight (lead..., d_in, d_out): the tap is
+    (lead..., *token_shape, d_out) — the lead dims line up with the layer
+    stack so ``lax.scan`` slices the tap alongside the weight."""
+    return tuple(w_shape[:-2]) + tuple(token_shape) + (w_shape[-1],)
+
+
+def make_full_taps(params: Any, precon_paths: set[str],
+                   token_shape: tuple[int, ...]) -> dict[str, jnp.ndarray]:
+    """Zero full taps (K-FAC's ``b='outer'`` capture) for every
+    preconditioned weight path.
+
+    Unlike vector taps, a full tap materializes the per-token cotangent so
+    ``BBᵀ`` can be formed — that cost is intrinsic to K-FAC.
+    ``token_shape`` is the broadcastable token layout of the layer outputs,
+    e.g. ``(batch, seq_len)`` for the LM or ``(batch,)`` for the MLPs.
+    """
+    flat = flatten_params(params)
+    return {path: jnp.zeros(full_tap_shape(flat[path].shape, token_shape),
+                            jnp.float32)
+            for path in precon_paths}
+
+
 def flatten_params(params: Any, prefix: str = '') -> dict[str, Any]:
     """Nested-dict params -> {'a/b/c': leaf}."""
     out = {}
@@ -210,12 +234,25 @@ def finalize_stats(forward: dict[str, LayerStats],
                     scale = n_tokens / jnp.maximum(st.count, 1.0)
                     b_mean = b_mean * scale[..., None]
             elif capture.b == 'outer':
-                # tg is the full cotangent (tokens, d_out) (or stacked);
-                # B_kf = n * Σ z̃ z̃ᵀ.
-                zt = tg.reshape(-1, tg.shape[-1]).astype(jnp.float32)
-                n = n_tokens if n_tokens is not None else zt.shape[0]
-                b_outer = n * (zt.T @ zt)
-                b_mean = jnp.sum(zt, axis=0)
+                # tg is the full cotangent (lead..., tokens..., d_out);
+                # B_kf = n * Σ z̃ z̃ᵀ, reduced over token axes ONLY.  The
+                # leading stack dims (scan layers / experts) must survive
+                # — flattening them into the token axis dropped the scan
+                # path dim from b_outer while the forward-side a_outer
+                # kept it, so `sharded_refresh`'s cached and recomputed
+                # branches disagreed on bucket shapes and lowering failed
+                # on stacked models (the kfac demo-LM bug).  The lead-dim
+                # count comes from the forward stats of the same layer.
+                nlead = 0
+                if st.a_outer is not None:
+                    nlead = st.a_outer.ndim - 2
+                elif st.a_mean is not None:
+                    nlead = st.a_mean.ndim - 1
+                zt = tg.reshape(tg.shape[:nlead] + (-1, tg.shape[-1]))
+                zt = zt.astype(jnp.float32)
+                n = n_tokens if n_tokens is not None else zt.shape[-2]
+                b_outer = n * jnp.einsum('...ti,...tj->...ij', zt, zt)
+                b_mean = jnp.sum(zt, axis=-2)
         out[path] = LayerStats(a_mean=st.a_mean, b_mean=b_mean,
                                a_outer=st.a_outer, b_outer=b_outer,
                                count=st.count)

@@ -17,6 +17,7 @@ import jax
 
 from repro.configs import get_config, get_reduced
 from repro.configs.registry import ARCH_IDS, demo_lm
+from repro.core import kv as kvlib
 from repro.core import make_optimizer
 from repro.data import LMStream, Prefetcher
 from repro.models import build_model
@@ -26,7 +27,8 @@ from repro.train import Trainer, TrainerConfig
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument('--arch', default='demo', help=f'demo|{"|".join(ARCH_IDS)}')
+    ap.add_argument('--arch', default='demo',
+                    help=f'demo|demo-base|demo-100m|{"|".join(ARCH_IDS)}')
     ap.add_argument('--reduced', action='store_true',
                     help='use the reduced config (CPU-runnable)')
     ap.add_argument('--opt', default='eva')
@@ -35,6 +37,10 @@ def main() -> None:
     ap.add_argument('--batch', type=int, default=8)
     ap.add_argument('--seq-len', type=int, default=64)
     ap.add_argument('--ckpt-every', type=int, default=25)
+    ap.add_argument('--log-every', type=int, default=10)
+    ap.add_argument('--profile', action='store_true',
+                    help='span-fenced phased step + memory/HLO telemetry '
+                         '(repro.obs; slight overhead, donation off)')
     ap.add_argument('--out-dir', default='runs/launch')
     ap.add_argument('--no-prefetch', action='store_true')
     ap.add_argument('--distributed', action='store_true',
@@ -46,6 +52,8 @@ def main() -> None:
 
     if args.arch == 'demo':
         cfg = demo_lm('small')
+    elif args.arch.startswith('demo-'):
+        cfg = demo_lm(args.arch.split('-', 1)[1])
     else:
         cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if cfg.family in ('encdec', 'vlm') or cfg.input_is_embeds:
@@ -59,10 +67,16 @@ def main() -> None:
                       seed=0)
     data = stream if args.no_prefetch else Prefetcher(stream)
     opt, capture = make_optimizer(args.opt, lr=args.lr)
-    tc = TrainerConfig(total_steps=args.steps, log_every=10,
-                       ckpt_every=args.ckpt_every,
+    taps_fn = None
+    if capture.b == 'outer':
+        # K-FAC-style capture needs full z-shaped taps (kv.make_full_taps)
+        paths = set(model.precon_paths()) & set(kvlib.flatten_params(params))
+        token_shape = (args.batch, args.seq_len)
+        taps_fn = lambda p: kvlib.make_full_taps(p, paths, token_shape)
+    tc = TrainerConfig(total_steps=args.steps, log_every=args.log_every,
+                       ckpt_every=args.ckpt_every, profile=args.profile,
                        out_dir=f'{args.out_dir}/{cfg.name}-{args.opt}')
-    Trainer(model, opt, capture, tc).fit(params, data)
+    Trainer(model, opt, capture, tc, taps_fn=taps_fn).fit(params, data)
 
 
 if __name__ == '__main__':

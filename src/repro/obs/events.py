@@ -1,0 +1,268 @@
+"""Versioned, schema-typed telemetry records + the JSONL ``Recorder``.
+
+One event model for everything the runtime emits — trainer step records,
+refresh/ownership/comm-exchange one-offs, straggler flags, phase spans and
+profile samples — replacing the hand-rolled dicts that used to be scattered
+across ``train/trainer.py``, ``comm/metrics.py`` and the benchmarks.
+
+Design rules:
+
+* Every record is one JSON object per line with an ``event`` type and a
+  schema version ``v`` (``SCHEMA_VERSION``).  Everything else is typed by
+  ``SCHEMAS[event]``; per-site key families use a trailing ``/*``
+  (``pipeline_lag/stats/kfac``).  Unknown top-level keys are validation
+  errors — the emitters are all in-repo, so strictness catches typos
+  instead of letting them rot in artifacts.
+* Records are **bit-compatible supersets** of the pre-obs trainer fields:
+  old parsers that read ``step``/``loss``/``step_time_s`` keep working,
+  and the loader treats envelope-less step-shaped dicts as legacy ``step``
+  records (pre-v1 files stay readable).
+* Versioning policy: bump ``SCHEMA_VERSION`` whenever a field changes
+  name, unit, or type, or a required field is added — adding an optional
+  field is NOT a bump (supersets are the compatibility contract).  Note
+  the bump in CHANGES.md (see the conventions block there).
+* The scheduler-owned step fields come from the producing modules'
+  ``METRIC_FIELDS`` declarations (``schedule/runtime.py``,
+  ``schedule/pipeline.py``) so the schema cannot drift from the code that
+  emits them.
+
+The ``Recorder`` owns the sink AND the run-scoped comm-counter context
+(``repro.comm.metrics.scope``): while a recorder is open, every exchange
+site traced belongs to *its* run — this replaces the trainer's old
+trace-count-baselining workaround over the process-global table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Optional
+
+from repro.comm import metrics as comm_metrics
+from repro.schedule import pipeline as _pipemod
+from repro.schedule import runtime as _schedrt
+
+SCHEMA_VERSION = 1
+
+_NUM = (int, float)
+_INT = (int,)
+_STR = (str,)
+_DICT = (dict,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    """One schema field: accepted JSON types, requiredness, display unit."""
+    types: tuple
+    required: bool = False
+    unit: str = ''
+
+
+def _declared(module) -> dict[str, 'Field']:
+    """METRIC_FIELDS of a producer module -> schema fields."""
+    kinds = {'int': _INT, 'num': _NUM}
+    return {name: Field(kinds[kind], unit=unit)
+            for name, (kind, unit) in module.METRIC_FIELDS.items()}
+
+
+SCHEMAS: dict[str, dict[str, Field]] = {
+    # one per logged training step (superset of the pre-obs record)
+    'step': {
+        'step': Field(_INT, required=True, unit='index'),
+        'loss': Field(_NUM, required=True),
+        'grad_norm': Field(_NUM),
+        'step_time_s': Field(_NUM, unit='s'),
+        'exchanged_mb_cum': Field(_NUM, unit='MiB'),
+        **_declared(_schedrt),
+        **_declared(_pipemod),
+    },
+    # one per realized curvature refresh (derived from the cumulative
+    # counter crossing between steps)
+    'refresh': {
+        'step': Field(_INT, required=True, unit='index'),
+        'refreshes': Field(_INT, required=True, unit='cumulative refreshes'),
+        'step_time_s': Field(_NUM, unit='s'),
+    },
+    # startup one-off: per-bucket refresh-owner map
+    'refresh_ownership': {
+        'world': Field(_INT, required=True, unit='workers'),
+        'owners': Field(_DICT, required=True,
+                        unit='bucket -> per-worker slice counts'),
+    },
+    # post-trace one-off: per-call-site logical exchange bytes (site dicts
+    # are validated by _validate_site; codec extras stay open)
+    'comm_exchange': {
+        'sites': Field(_DICT, required=True),
+    },
+    # straggler watchdog flag
+    'straggler': {
+        'step': Field(_INT, required=True, unit='index'),
+        'step_time_s': Field(_NUM, required=True, unit='s'),
+        'median_s': Field(_NUM, required=True, unit='s'),
+        'factor': Field(_NUM, unit='trigger threshold x median'),
+    },
+    # one host-timed phase span (block_until_ready-fenced)
+    'span': {
+        'name': Field(_STR, required=True),
+        'ms': Field(_NUM, required=True, unit='ms'),
+        'step': Field(_INT, unit='index'),
+        'seq': Field(_INT, unit='emission order'),
+        'depth': Field(_INT, unit='nesting depth'),
+        'parent': Field(_STR + (type(None),)),
+    },
+    # profile-mode sample: live buffers + one-shot HLO costs per fn
+    'profile': {
+        'step': Field(_INT, required=True, unit='index'),
+        'live_buffer_mb': Field(_NUM, unit='MiB'),
+        'device_bytes_in_use': Field(_INT, unit='bytes'),
+        'fns': Field(_DICT, unit='fn -> HLO cost/overlap summary'),
+    },
+    # one BENCH_*.json row (benchmarks/common.write_json)
+    'bench': {
+        'name': Field(_STR, required=True),
+        'us_per_call': Field(_NUM, required=True, unit='us'),
+        'derived': Field(_STR),
+        'fields': Field(_DICT),
+    },
+}
+
+_SITE_FIELDS = {
+    'bytes_per_call': Field(_INT, required=True, unit='B'),
+    'codec': Field(_STR, required=True),
+    'mode': Field(_STR, required=True),
+    'traces': Field(_INT),
+    'world': Field(_INT),
+    'pods': Field((list, tuple), unit='(n_pods, pod_size)'),
+    'ici_bytes': Field(_INT, unit='B'),
+    'dcn_bytes': Field(_INT, unit='B'),
+}
+
+
+class SchemaError(ValueError):
+    pass
+
+
+def _check(value, fld: Field, where: str) -> list[str]:
+    # bool is an int subclass in Python; never a valid numeric field here
+    if isinstance(value, bool) or not isinstance(value, fld.types):
+        return [f'{where}: expected {"/".join(t.__name__ for t in fld.types)}'
+                f', got {type(value).__name__} ({value!r})']
+    return []
+
+
+def _validate_site(site: str, rec: Any) -> list[str]:
+    where = f'comm_exchange.sites[{site!r}]'
+    if not isinstance(rec, dict):
+        return [f'{where}: expected object, got {type(rec).__name__}']
+    errs = []
+    for name, fld in _SITE_FIELDS.items():
+        if name in rec:
+            errs += _check(rec[name], fld, f'{where}.{name}')
+        elif fld.required:
+            errs.append(f'{where}: missing required field {name!r}')
+    return errs  # codec/topology extras beyond _SITE_FIELDS stay open
+
+
+def infer_event(rec: dict) -> Optional[str]:
+    """Event type of a record; legacy envelope-less step dicts count."""
+    ev = rec.get('event')
+    if ev is None and 'step' in rec and 'loss' in rec:
+        return 'step'
+    return ev
+
+
+def validate_record(rec: Any) -> list[str]:
+    """All schema violations of one record ([] = valid)."""
+    if not isinstance(rec, dict):
+        return [f'record is not an object: {rec!r}']
+    ev = infer_event(rec)
+    if ev is None:
+        return [f'missing event type (keys: {sorted(rec)[:6]})']
+    if ev not in SCHEMAS:
+        return [f'unknown event type {ev!r} (have {sorted(SCHEMAS)})']
+    errs: list[str] = []
+    v = rec.get('v')
+    if v is not None and v != SCHEMA_VERSION:
+        errs.append(f'{ev}: schema version {v} != {SCHEMA_VERSION}')
+    schema = SCHEMAS[ev]
+    for name, fld in schema.items():
+        if fld.required and name not in rec:
+            errs.append(f'{ev}: missing required field {name!r}')
+    for key, value in rec.items():
+        if key in ('event', 'v'):
+            continue
+        fld = schema.get(key)
+        if fld is None and '/' in key:
+            fld = schema.get(key.split('/', 1)[0] + '/*')
+        if fld is None:
+            errs.append(f'{ev}: unknown field {key!r}')
+            continue
+        errs += _check(value, fld, f'{ev}.{key}')
+    if ev == 'comm_exchange' and isinstance(rec.get('sites'), dict):
+        for site, srec in rec['sites'].items():
+            errs += _validate_site(site, srec)
+    return errs
+
+
+def step_fields(metrics: dict) -> dict:
+    """Typed host-side step-record fields from the jitted step's metrics
+    dict (the scheduler/pipeline scalars are traced arrays)."""
+    out: dict[str, Any] = {}
+    if 'refreshes' in metrics:
+        out['refreshes'] = int(metrics['refreshes'])
+        out['staleness'] = float(metrics['staleness'])
+        out['refresh_since'] = int(metrics['refresh_since'])
+    for key, value in metrics.items():
+        if key.startswith('pipeline_lag'):
+            out[key] = int(value)
+    return out
+
+
+class Recorder:
+    """JSONL sink + run-scoped comm-counter context.
+
+    ``emit`` stamps the envelope (``event``, ``v``), validates against the
+    schema (fail-fast — a malformed record is a bug at the emit site, not
+    something to discover in the artifact), appends one line, and returns
+    the record.  ``path=None`` keeps records in memory only (tests).
+    """
+
+    def __init__(self, path: Optional[Any] = None, validate: bool = True,
+                 scope_comm: bool = True):
+        self._f = Path(path).open('a') if path is not None else None
+        self._validate = validate
+        self._scope = comm_metrics.push_scope() if scope_comm else None
+        self.records: list[dict] = []
+
+    def emit(self, event: str, **fields: Any) -> dict:
+        rec = {'event': event, 'v': SCHEMA_VERSION, **fields}
+        if self._validate:
+            errs = validate_record(rec)
+            if errs:
+                raise SchemaError('; '.join(errs))
+        self.records.append(rec)
+        if self._f is not None:
+            self._f.write(json.dumps(rec) + '\n')
+            self._f.flush()
+        return rec
+
+    def comm_sites(self) -> dict:
+        """Exchange sites traced while THIS recorder was open (falls back
+        to the process-global table when scoping was disabled)."""
+        if self._scope is not None:
+            return self._scope.snapshot()
+        return comm_metrics.snapshot()
+
+    def close(self) -> None:
+        if self._scope is not None:
+            comm_metrics.pop_scope(self._scope)
+            self._scope = None
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> 'Recorder':
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

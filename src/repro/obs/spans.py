@@ -1,0 +1,165 @@
+"""Phase spans, the straggler watchdog, and profile-mode samplers.
+
+Spans are host-timed phase windows (data/grad/precondition/refresh/
+exchange/apply/step) around pieces of the jitted step.  JAX dispatch is
+async, so a naive ``perf_counter`` pair around a jitted call measures
+dispatch, not compute — each span therefore carries an optional *fence*:
+the device outputs produced inside the span, passed to
+``jax.block_until_ready`` before the clock stops.  This is donate-safe
+(blocking reads nothing back; it only waits), but fencing at phase
+granularity does serialize phases the scheduler could otherwise overlap —
+which is why span timing lives behind the trainer's ``profile`` flag
+instead of always-on (README "Observability" has the measured overhead).
+
+Profile mode additionally samples per-step live-buffer bytes
+(``jax.live_arrays``), device-memory stats where the backend has them, and
+a one-shot HLO cost + blocking-collective summary per compiled fn
+(``launch/hlo_analysis``).
+"""
+from __future__ import annotations
+
+import contextlib
+import statistics
+import time
+from typing import Any, Iterator, Optional
+
+import jax
+
+from repro.obs import events
+
+
+class SpanHandle:
+    """Yielded by ``SpanTracker.span``; ``fence(x)`` registers the device
+    values the span must wait on before its clock stops."""
+
+    __slots__ = ('_fence',)
+
+    def __init__(self) -> None:
+        self._fence: Any = None
+
+    def fence(self, x: Any) -> Any:
+        self._fence = x
+        return x
+
+
+class SpanTracker:
+    """Emits one ``span`` record per closed span, with nesting metadata
+    (``depth``/``parent``) and a global emission order (``seq``)."""
+
+    def __init__(self, recorder: Optional[events.Recorder] = None,
+                 clock=time.perf_counter):
+        self.recorder = recorder
+        self.records: list[dict] = []
+        self._clock = clock
+        self._stack: list[str] = []
+        self._seq = 0
+
+    @contextlib.contextmanager
+    def span(self, name: str, step: Optional[int] = None
+             ) -> Iterator[SpanHandle]:
+        handle = SpanHandle()
+        parent = self._stack[-1] if self._stack else None
+        depth = len(self._stack)
+        self._stack.append(name)
+        t0 = self._clock()
+        try:
+            yield handle
+        finally:
+            if handle._fence is not None:
+                jax.block_until_ready(handle._fence)
+            ms = (self._clock() - t0) * 1e3
+            self._stack.pop()
+            rec = {'name': name, 'ms': round(ms, 4), 'seq': self._seq,
+                   'depth': depth, 'parent': parent}
+            if step is not None:
+                rec['step'] = int(step)
+            self._seq += 1
+            self.records.append(rec)
+            if self.recorder is not None:
+                self.recorder.emit('span', **rec)
+
+
+class StragglerWatchdog:
+    """Median-of-window straggler detection (factored out of the trainer so
+    injected timings can drive it in tests).
+
+    ``observe(step, dt)`` returns True — and emits a ``straggler`` record —
+    when ``dt`` exceeds ``factor ×`` the median of the last ``window``
+    step times (current step included, matching the original trainer
+    logic); needs ``min_history`` samples before it can trigger.  On a
+    real pod this feeds the controller that evicts/replaces the slow host.
+    """
+
+    def __init__(self, factor: float = 3.0,
+                 recorder: Optional[events.Recorder] = None,
+                 window: int = 64, min_history: int = 8):
+        self.factor = factor
+        self.recorder = recorder
+        self.window = window
+        self.min_history = min_history
+        self.times: list[float] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) < self.min_history:
+            return False
+        med = statistics.median(self.times[-self.window:])
+        if dt <= self.factor * med:
+            return False
+        if self.recorder is not None:
+            self.recorder.emit('straggler', step=int(step),
+                               step_time_s=round(dt, 6),
+                               median_s=round(med, 6), factor=self.factor)
+        print(f'[obs] STRAGGLER step {step}: {dt*1e3:.0f} ms vs median '
+              f'{med*1e3:.0f} ms — flagged for controller', flush=True)
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Profile-mode samplers
+
+
+def live_buffer_mb() -> float:
+    """Total bytes of live device arrays in this process, in MiB."""
+    try:
+        arrays = jax.live_arrays()
+    except Exception:
+        return -1.0
+    return round(sum(getattr(a, 'nbytes', 0) for a in arrays) / 2 ** 20, 3)
+
+
+def device_bytes_in_use() -> Optional[int]:
+    """Allocator bytes-in-use of device 0, where the backend reports it
+    (TPU/GPU; the CPU backend returns None)."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats or 'bytes_in_use' not in stats:
+        return None
+    return int(stats['bytes_in_use'])
+
+
+def hlo_costs(compiled_text: str) -> dict:
+    """One compiled fn's HLO cost + blocking-collective summary — the
+    ``fns`` entries of a ``profile`` record (trip-count-aware, reusing
+    ``launch/hlo_analysis``)."""
+    from repro.launch import hlo_analysis
+    costs = hlo_analysis.analyze(compiled_text)
+    overlap = hlo_analysis.collective_overlap(compiled_text)
+    dep_frac = (overlap.dot_flops_dependent / overlap.dot_flops_total
+                if overlap.dot_flops_total else 0.0)
+    return {
+        'flops': costs.flops,
+        'traffic_bytes': costs.traffic_bytes,
+        'collective_bytes': costs.collective_bytes,
+        'collective_count': overlap.collective_count,
+        'blocking_collectives': overlap.blocking_collectives,
+        'dependent_dot_flop_frac': round(dep_frac, 4),
+    }
+
+
+def compiled_fn_costs(jitted_fn, *args) -> dict:
+    """``hlo_costs`` of a jitted fn lowered at ``args``' shapes."""
+    text = jitted_fn.lower(*args).compile().as_text()
+    return hlo_costs(text)

@@ -20,7 +20,8 @@ from repro.schedule.ownership import (assign_owners, describe_ownership,
                                       inverse_cost, world_and_rank)
 from repro.schedule.pipeline import (PipelineState, pipe_entries,
                                      pipeline_metrics, staged_pmean)
-from repro.schedule.runtime import (RefreshRuntime, from_extras, resolve_pipe,
+from repro.schedule.runtime import (RefreshRuntime, from_extras,
+                                    ownership_event, resolve_pipe,
                                     sched_states, schedule_metrics,
                                     sharded_refresh)
 
@@ -29,6 +30,6 @@ __all__ = [
     'named_policy', 'init_state', 'commit',
     'assign_owners', 'describe_ownership', 'inverse_cost', 'world_and_rank',
     'PipelineState', 'pipe_entries', 'pipeline_metrics', 'staged_pmean',
-    'RefreshRuntime', 'from_extras', 'resolve_pipe', 'sched_states',
-    'schedule_metrics', 'sharded_refresh',
+    'RefreshRuntime', 'from_extras', 'ownership_event', 'resolve_pipe',
+    'sched_states', 'schedule_metrics', 'sharded_refresh',
 ]

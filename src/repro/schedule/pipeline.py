@@ -130,6 +130,14 @@ def pipe_entries(opt_state: Any) -> list[tuple[str, PipelineState]]:
     return found
 
 
+# Step-metric fields this module contributes (see the matching block in
+# schedule/runtime.py): a trailing '/*' marks a per-site key family.
+METRIC_FIELDS = {
+    'pipeline_lag': ('int', 'steps of realized double-buffer staleness'),
+    'pipeline_lag/*': ('int', 'per-site realized staleness'),
+}
+
+
 def pipeline_metrics(opt_state: Any) -> dict[str, jnp.ndarray]:
     """{'pipeline_lag', 'pipeline_lag/<site>'} — realized staleness (steps)
     of the buffer each pipelined exchange site will apply next; {} when the

@@ -177,6 +177,11 @@ def sharded_refresh(plan: BucketPlan, refresh: jnp.ndarray,
         for b in plan.buckets:
             out[b.key] = jax.lax.map(lambda a, b=b: item_fn(b, a),
                                      args_b[b.key])
+        # W=1: nothing moves, but the site still reports the stack's
+        # logical payload so telemetry breakdowns compare across worlds
+        metrics.record(site, bytes_per_call=sum(
+            exchange.tree_payload_bytes(v, exchange_codec.F32)
+            for v in out.values()), codec='f32', mode='local')
         return out
 
     def recompute_sharded(_):
@@ -278,6 +283,28 @@ def sched_states(opt_state: Any) -> list[policy_mod.SchedState]:
 
     walk(opt_state)
     return found
+
+
+# Step-metric fields this module contributes, declared next to their
+# producer so the telemetry schema (repro.obs.events) stays in sync with
+# the code that emits them: name -> (kind in {'int','num'}, unit).
+METRIC_FIELDS = {
+    'refreshes': ('int', 'cumulative refreshes'),
+    'refresh_since': ('int', 'steps since last refresh'),
+    'staleness': ('num', 'policy staleness proxy'),
+}
+
+
+def ownership_event(plan: Optional[BucketPlan],
+                    world: Optional[int] = None) -> Optional[dict]:
+    """Typed ``refresh_ownership`` record body ({'world','owners'}) for a
+    bucket plan under a ``world``-worker mesh — what the trainer emits at
+    startup through ``repro.obs`` (None when nothing is preconditioned)."""
+    if plan is None or not plan.buckets:
+        return None
+    world = world if world is not None else max(1, jax.device_count())
+    return {'world': int(world),
+            'owners': ownership.describe_ownership(plan, world)}
 
 
 def schedule_metrics(opt_state: Any) -> dict[str, jnp.ndarray]:

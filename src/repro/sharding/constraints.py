@@ -88,10 +88,22 @@ def issue_pmean_stats(tree, codec=None, site: Optional[str] = None
     dtype-preserving."""
     axes = data_axes_in_scope()
     if not axes or tree is None:
+        if site is not None and tree is not None:
+            from repro.comm import exchange, get_codec, metrics
+            c = get_codec(codec)
+            # No data axis bound (single-host pjit): nothing moves on the
+            # wire, but the site still carries its logical payload so the
+            # telemetry breakdown stays comparable across world sizes.
+            metrics.record(site, bytes_per_call=exchange.tree_payload_bytes(
+                tree, c), codec=c.name, mode='local')
         return _InFlightPmean(tree, None, 'raw')
-    from repro.comm import exchange, get_codec
+    from repro.comm import exchange, get_codec, metrics
     arg = axes if len(axes) > 1 else axes[0]
     if get_codec(codec).passthrough:
+        if site is not None:
+            c = get_codec(codec)
+            metrics.record(site, bytes_per_call=exchange.tree_payload_bytes(
+                tree, c), codec=c.name, mode='psum')
         return _InFlightPmean(
             jax.tree_util.tree_map(lambda x: jax.lax.psum(x, arg), tree),
             jax.lax.psum(1, arg), 'passthrough')

@@ -36,6 +36,12 @@ def _default_make_taps(model, params, capture: kvlib.CaptureConfig):
         # simple models: batch-size-dependent full taps are bound later
         raise ValueError('models with custom make_taps need explicit taps '
                          '(use make_train_step(..., taps_fn=...))')
+    if capture.b == 'outer':
+        # K-FAC needs the z-shaped cotangent; a silent vector-tap fallback
+        # here folded the scan path dim into the token axis (wrong stats
+        # AND shape-mismatched lax.cond branches in sharded_refresh)
+        raise ValueError("capture.b='outer' needs full z-shaped taps — "
+                         "pass taps_fn (see kv.make_full_taps)")
     flat = kvlib.flatten_params(params)
     return kvlib.make_vector_taps(params, set(model.precon_paths()) & set(flat))
 
@@ -151,6 +157,53 @@ def make_train_step(model, opt: GradientTransformation,
         return new_params, new_opt_state, metrics
 
     return train_step
+
+
+def make_phased_step(model, opt: GradientTransformation,
+                     capture: kvlib.CaptureConfig,
+                     taps_fn: Optional[Callable] = None,
+                     sched: Optional[schedrt.RefreshRuntime] = None,
+                     comm: Optional[Any] = None
+                     ) -> tuple[Callable, Callable, Callable]:
+    """The train step split at phase boundaries for span-level timing
+    (``repro.obs``): grad → precondition (= optimizer update, where the
+    curvature refresh/exchange live) → apply.
+
+    Returns ``(grad_fn, update_fn, apply_fn)`` with
+      ``grad_fn(params, batch) -> (loss, grads, stats)``
+      ``update_fn(grads, stats, loss, opt_state, params)
+          -> (updates, new_opt_state, metrics)``
+      ``apply_fn(params, updates) -> new_params``
+    whose composition is semantically identical to
+    ``make_train_step(microbatches=1)``.  Each piece jits separately so a
+    host-side span with a ``block_until_ready`` fence can attribute wall
+    time per phase; nothing is donated (profile mode trades the in-place
+    update for measurability — see the README overhead caveats).
+    """
+    sched = sched if sched is not None else schedrt.RefreshRuntime()
+
+    def grad_fn(params, batch):
+        taps = taps_fn(params) if taps_fn is not None else None
+        return compute_grads_and_stats(model, params, batch, capture, taps)
+
+    def update_fn(grads, stats, loss, opt_state, params):
+        updates, new_opt_state = opt.update(
+            grads, opt_state, params=params,
+            extras=Extras(stats=stats, loss=loss,
+                          plan=_plan_for_stats(grads, stats), sched=sched,
+                          comm=comm))
+        grad_norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        metrics = {'loss': loss, 'grad_norm': grad_norm}
+        metrics.update(schedrt.schedule_metrics(new_opt_state))
+        metrics.update(pipemod.pipeline_metrics(new_opt_state))
+        return updates, new_opt_state, metrics
+
+    def apply_fn(params, updates):
+        return apply_updates(params, updates)
+
+    return grad_fn, update_fn, apply_fn
 
 
 def init_opt_state(model, opt: GradientTransformation,

@@ -6,10 +6,19 @@ Features:
   * async checkpointing every ``ckpt_every`` steps + keep-K GC,
   * preemption handling: SIGTERM/SIGINT → synchronous checkpoint → clean
     exit (the standard TPU-pod eviction contract),
-  * straggler watchdog: per-step wall-time EMA; steps slower than
-    ``straggler_factor``× the running median are logged (on a real pod this
-    feeds the controller that evicts/replaces the slow host),
-  * metrics JSONL + stdout.
+  * straggler watchdog (``repro.obs.spans.StragglerWatchdog``): steps
+    slower than ``straggler_factor``× the running median emit a typed
+    ``straggler`` record (on a real pod this feeds the controller that
+    evicts/replaces the slow host),
+  * unified telemetry (``repro.obs``): every record in ``metrics.jsonl``
+    is schema-typed and versioned; comm-site attribution uses the
+    recorder's run-scoped counter context instead of baselining the
+    process-global table,
+  * ``profile`` mode: the step runs as phased jitted fns
+    (grad/precondition/apply) under ``block_until_ready``-fenced spans,
+    with per-step live-buffer samples and a one-shot HLO cost record per
+    fn.  Off by default — fencing serializes phases (see README
+    "Observability" for the measured overhead) and disables donation.
 
 Elasticity: restore() accepts any mesh — a run checkpointed on N hosts
 resumes on M (resharding happens on load, data skips to the saved step).
@@ -17,23 +26,20 @@ resumes on M (resharding happens on load, data skips to the saved step).
 from __future__ import annotations
 
 import dataclasses
-import json
-import signal
-import statistics
 import time
 from pathlib import Path
-from typing import Any, Callable, Iterable, Optional
+from typing import Any, Callable, Optional
 
 import jax
-import numpy as np
 
-from repro.comm import metrics as comm_metrics
 from repro.core import kv as kvlib
 from repro.core.transform import GradientTransformation
-from repro.schedule import ownership
+from repro.obs import events as obs_events
+from repro.obs import spans as obs_spans
 from repro.schedule import runtime as schedrt
 from repro.train import checkpoint as ckpt
-from repro.train.step import init_opt_state, make_train_step, stats_plan_of
+from repro.train.step import (init_opt_state, make_phased_step,
+                              make_train_step, stats_plan_of)
 
 
 @dataclasses.dataclass
@@ -45,6 +51,8 @@ class TrainerConfig:
     out_dir: str = 'runs/default'
     straggler_factor: float = 3.0
     donate: bool = True
+    profile: bool = False          # span-fenced phased step + memory/HLO
+                                   # records (forces donation off)
 
 
 class Trainer:
@@ -67,14 +75,22 @@ class Trainer:
         step_fn = make_train_step(model, opt, capture, taps_fn=taps_fn,
                                   sched=self.sched, comm=comm)
         self.step_fn = jax.jit(step_fn,
-                               donate_argnums=(0, 1) if cfg.donate else ())
+                               donate_argnums=(0, 1)
+                               if cfg.donate and not cfg.profile else ())
+        self._phases = None
+        if cfg.profile:
+            # span timing needs phase boundaries; fences read nothing back
+            # but donation is off so a fenced phase's inputs stay alive
+            self._phases = tuple(jax.jit(f) for f in make_phased_step(
+                model, opt, capture, taps_fn=taps_fn, sched=self.sched,
+                comm=comm))
+        self._watchdog = obs_spans.StragglerWatchdog(cfg.straggler_factor)
         self._preempted = False
-        self._step_times: list[float] = []
         self.metrics_path = self.out_dir / 'metrics.jsonl'
 
     # -- refresh-runtime observability ---------------------------------------
 
-    def _log_ownership(self, log_f, params, batch) -> None:
+    def _log_ownership(self, recorder, params, batch) -> None:
         """One startup record: the per-bucket refresh-owner map a W-worker
         data-parallel run of this model would use (W = local device count).
         Purely informational — cheap (eval_shape only), never fatal."""
@@ -83,26 +99,22 @@ class Trainer:
                                  taps_fn=self.taps_fn)
         except Exception:
             plan = None
-        if plan is None or not plan.buckets:
+        body = schedrt.ownership_event(plan)
+        if body is None:
             return
-        world = max(1, jax.device_count())
-        owners = ownership.describe_ownership(plan, world)
-        rec = {'event': 'refresh_ownership', 'world': world, 'owners': owners}
-        log_f.write(json.dumps(rec) + '\n')
-        log_f.flush()
-        print(f'[trainer] refresh ownership over W={world}: '
-              + ' '.join(f'{k}:{v}' for k, v in owners.items()), flush=True)
+        recorder.emit('refresh_ownership', **body)
+        print(f"[trainer] refresh ownership over W={body['world']}: "
+              + ' '.join(f'{k}:{v}' for k, v in body['owners'].items()),
+              flush=True)
 
-    def _log_comm(self, log_f, sites) -> None:
+    def _log_comm(self, recorder, sites) -> None:
         """One record after the step is traced: the per-call-site logical
         exchange bytes the ``repro.comm`` layer counted for THIS trainer's
         step (empty when nothing in this run exchanges — e.g. single-host
         pjit)."""
         if not sites:
             return
-        rec = {'event': 'comm_exchange', 'sites': sites}
-        log_f.write(json.dumps(rec) + '\n')
-        log_f.flush()
+        recorder.emit('comm_exchange', sites=sites)
         print('[trainer] comm exchange: ' + ' '.join(
             f"{s}:{v['bytes_per_call']}B/{v['codec']}/{v['mode']}"
             for s, v in sorted(sites.items())), flush=True)
@@ -110,6 +122,8 @@ class Trainer:
     # -- preemption ---------------------------------------------------------
 
     def _install_signal_handlers(self):
+        import signal
+
         def handler(signum, frame):
             del frame
             print(f'[trainer] caught signal {signum}: checkpoint-and-exit '
@@ -121,6 +135,49 @@ class Trainer:
                 signal.signal(sig, handler)
             except ValueError:
                 pass  # not in main thread (tests)
+
+    # -- profile-mode step ----------------------------------------------------
+
+    def _profiled_step(self, tracker, step, data, params, opt_state):
+        """One step through the phased fns under fenced spans.  Returns the
+        same (params, opt_state, metrics) as the fused step, plus the
+        intermediates the one-shot HLO record needs."""
+        grad_fn, update_fn, apply_fn = self._phases
+        with tracker.span('step', step=step) as sp_all:
+            with tracker.span('data', step=step):
+                batch = data.batch_at(step)
+            with tracker.span('grad', step=step) as sp:
+                loss, grads, stats = grad_fn(params, batch)
+                sp.fence((loss, grads))
+            with tracker.span('precondition', step=step) as sp:
+                updates, opt_state, metrics = update_fn(grads, stats, loss,
+                                                        opt_state, params)
+                sp.fence(updates)
+            with tracker.span('apply', step=step) as sp:
+                params = apply_fn(params, updates)
+                sp.fence(params)
+            sp_all.fence(params)
+        phase_args = {'grad': (grad_fn, (params, batch)),
+                      'precondition': (update_fn, (grads, stats, loss,
+                                                   opt_state, params)),
+                      'apply': (apply_fn, (params, updates))}
+        return params, opt_state, metrics, phase_args
+
+    def _emit_profile(self, recorder, step, phase_args, one_shot_hlo):
+        rec: dict[str, Any] = {'step': step,
+                               'live_buffer_mb': obs_spans.live_buffer_mb()}
+        dev = obs_spans.device_bytes_in_use()
+        if dev is not None:
+            rec['device_bytes_in_use'] = dev
+        if one_shot_hlo:
+            try:
+                rec['fns'] = {
+                    name: obs_spans.compiled_fn_costs(fn, *args)
+                    for name, (fn, args) in phase_args.items()}
+            except Exception as e:  # never fatal: HLO text formats drift
+                print(f'[trainer] profile: HLO cost pass skipped ({e})',
+                      flush=True)
+        recorder.emit('profile', **rec)
 
     # -- main loop ------------------------------------------------------------
 
@@ -152,64 +209,71 @@ class Trainer:
                                        taps_fn=self.taps_fn, sched=self.sched,
                                        comm=self.comm)
 
-        # The comm byte counters are process-global and fill at TRACE time.
-        # To attribute sites to this trainer without destroying another
-        # run's records (no reset), baseline the per-site trace counts now:
-        # sites whose count grows during this fit's first step belong to
-        # this trainer; a warm-jit second fit() re-traces nothing, so fall
-        # back to the sites remembered from this trainer's previous fit.
-        base_traces = {k: v.get('traces', 0)
-                       for k, v in comm_metrics.snapshot().items()}
-
         # refresh count already in the (possibly restored) state — the
         # cumulative exchanged-bytes estimate below must count only THIS
         # run's refreshes, like it counts only this run's steps
         base_sched = schedrt.schedule_metrics(opt_state)
         ref_base = int(base_sched['refreshes']) if base_sched else 0
 
-        if self.cfg.donate:
+        if cfg.donate and not cfg.profile:
             # the jitted step donates its inputs; don't delete caller-owned
             # buffers (callers may reuse the initial params across runs)
-            params = jax.tree_util.tree_map(lambda x: x + 0 if hasattr(x, 'dtype') else x, params)
-            opt_state = jax.tree_util.tree_map(lambda x: x + 0 if hasattr(x, 'dtype') else x, opt_state)
+            params = jax.tree_util.tree_map(
+                lambda x: x + 0 if hasattr(x, 'dtype') else x, params)
+            opt_state = jax.tree_util.tree_map(
+                lambda x: x + 0 if hasattr(x, 'dtype') else x, opt_state)
 
-        log_f = self.metrics_path.open('a')
-        self._log_ownership(log_f, params, data.batch_at(start_step))
+        # The recorder owns this run's comm-counter scope: sites traced
+        # while it is open belong to THIS fit (a warm-jit second fit
+        # re-traces nothing → fall back to the previous fit's sites).
+        recorder = obs_events.Recorder(self.metrics_path)
+        self._watchdog.recorder = recorder
+        tracker = obs_spans.SpanTracker(recorder)
+        self._log_ownership(recorder, params, data.batch_at(start_step))
         history = []
+        prev_ref = ref_base
         step = start_step
         try:
             for step in range(start_step, cfg.total_steps):
-                batch = data.batch_at(step)
-                t0 = time.perf_counter()
-                params, opt_state, metrics = self.step_fn(params, opt_state,
-                                                          batch)
-                loss = float(metrics['loss'])  # sync point
-                dt = time.perf_counter() - t0
+                if self._phases is not None:
+                    t0 = time.perf_counter()
+                    params, opt_state, metrics, phase_args = \
+                        self._profiled_step(tracker, step, data, params,
+                                            opt_state)
+                    loss = float(metrics['loss'])
+                    dt = time.perf_counter() - t0
+                else:
+                    batch = data.batch_at(step)
+                    t0 = time.perf_counter()
+                    params, opt_state, metrics = self.step_fn(params,
+                                                              opt_state,
+                                                              batch)
+                    loss = float(metrics['loss'])  # sync point
+                    dt = time.perf_counter() - t0
                 if step == start_step:
-                    fresh = {k: v for k, v in comm_metrics.snapshot().items()
-                             if v.get('traces', 0) > base_traces.get(k, 0)}
+                    fresh = recorder.comm_sites()
                     if fresh:
                         self._run_sites = fresh
-                    self._log_comm(log_f, getattr(self, '_run_sites', {}))
-                self._watch_straggler(step, dt)
+                    self._log_comm(recorder, getattr(self, '_run_sites', {}))
+                self._watchdog.observe(step, dt)
                 history.append(loss)
+                sched_fields = obs_events.step_fields(metrics)
+                if 'refreshes' in sched_fields:
+                    cur_ref = sched_fields['refreshes']
+                    if cur_ref > prev_ref:
+                        recorder.emit('refresh', step=step,
+                                      refreshes=cur_ref,
+                                      step_time_s=round(dt, 6))
+                    prev_ref = cur_ref
                 if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
                     rec = {'step': step, 'loss': loss,
                            'grad_norm': float(metrics['grad_norm']),
-                           'step_time_s': round(dt, 4)}
+                           'step_time_s': round(dt, 4), **sched_fields}
                     sched_line = ''
-                    if 'refreshes' in metrics:
-                        rec['refreshes'] = int(metrics['refreshes'])
-                        rec['staleness'] = float(metrics['staleness'])
-                        rec['refresh_since'] = int(metrics['refresh_since'])
+                    if 'refreshes' in rec:
                         sched_line = (f" refreshes {rec['refreshes']}"
                                       f" staleness {rec['staleness']:.3g}")
-                    if 'pipeline_lag' in metrics:
-                        # realized double-buffer staleness (steps since the
-                        # applied buffer was exchanged) — overall + per site
-                        for k, v in metrics.items():
-                            if k.startswith('pipeline_lag'):
-                                rec[k] = int(v)
+                    if 'pipeline_lag' in rec:
                         sched_line += f" lag {rec['pipeline_lag']}"
                     # cumulative exchanged bytes, from THIS trainer's comm
                     # sites: per-step sites (grads/stats) fire every
@@ -227,8 +291,10 @@ class Trainer:
                              + refresh_b * (rec.get('refreshes', ref_base)
                                             - ref_base))
                             / 2 ** 20, 3)
-                    log_f.write(json.dumps(rec) + '\n')
-                    log_f.flush()
+                    recorder.emit('step', **rec)
+                    if self._phases is not None:
+                        self._emit_profile(recorder, step, phase_args,
+                                           one_shot_hlo=(step == start_step))
                     print(f'[trainer] step {step:6d} loss {loss:.4f} '
                           f'({dt*1e3:.0f} ms){sched_line}', flush=True)
                 if cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
@@ -245,18 +311,6 @@ class Trainer:
                     break
         finally:
             self._ckptr.wait()
-            log_f.close()
+            self._watchdog.recorder = None
+            recorder.close()
         return params, opt_state, history
-
-    # -- straggler watchdog ---------------------------------------------------
-
-    def _watch_straggler(self, step: int, dt: float) -> None:
-        self._step_times.append(dt)
-        if len(self._step_times) < 8:
-            return
-        window = self._step_times[-64:]
-        med = statistics.median(window)
-        if dt > self.cfg.straggler_factor * med:
-            print(f'[trainer] STRAGGLER step {step}: {dt*1e3:.0f} ms vs '
-                  f'median {med*1e3:.0f} ms — flagged for controller',
-                  flush=True)
