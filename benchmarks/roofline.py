@@ -167,6 +167,85 @@ def kv_comm_rows() -> list[str]:
     return lines + site_lines + refresh_lines
 
 
+def factor_policy_rows() -> list[str]:
+    """Per-factor byte attribution + the head-policy ladder (PR 8).
+
+    Two tables per arch: (a) the top-5 largest Kronecker-factor buckets by
+    f32 refresh-exchange share — making visible WHERE the owned-slice
+    gather's bytes actually go (glm4-9b: the 151552² vocab-head b_outer is
+    ~97% of the volume); (b) the measured refresh-exchange bytes at
+    W={REFRESH_WORLD} under ``head_policy`` dense/exclude/shard — the split
+    dense plan re-gathered through the same ``refresh_exchange_bytes``
+    accounting, plus the per-refresh matrix-free partial-psum bytes the
+    'shard' apply pays instead (``factor_sharded.shard_psum_bytes``)."""
+    from repro.comm import exchange as ex
+    from repro.core import factor_sharded as fsh
+    from repro.schedule import ownership
+
+    mb = 1 / 2 ** 20
+    cost = ownership.inverse_cost('both')
+    attr_lines = ['',
+                  '## Per-factor refresh bytes: top-5 buckets (f32, '
+                  'owned-slice gather)',
+                  '',
+                  '| arch | bucket | layers | factor dims | MB | share |',
+                  '|---|---|---|---|---|---|']
+    pol_lines = ['',
+                 f'## Vocab-head factor policy: refresh exchange at '
+                 f'W={REFRESH_WORLD} (f32, owned-slice)',
+                 '',
+                 '| arch | policy | refresh MB | vs dense psum | '
+                 'solve psum MB/step (iters=32) |',
+                 '|---|---|---|---|---|']
+    for arch in KVCOMM_ARCHES:
+        plan, _, _, _, _ = _arch_comm_trees(arch)
+        # (a) attribution: each bucket's share of the full-plan f32 gather
+        per_bucket = []
+        for b in plan.buckets:
+            n = len(b.paths) * ownership.lead_size(b)
+            d_in, d_out = int(b.shape[-2]), int(b.shape[-1])
+            per_bucket.append((4.0 * n * (d_in ** 2 + d_out ** 2), b))
+        total = sum(x for x, _ in per_bucket) or 1.0
+        per_bucket.sort(key=lambda t: -t[0])
+        for nbytes, b in per_bucket[:5]:
+            d_in, d_out = int(b.shape[-2]), int(b.shape[-1])
+            attr_lines.append(
+                f'| {arch} | {b.key} | {len(b.paths)} | {d_in}²+{d_out}² '
+                f'| {nbytes * mb:.1f} | {nbytes / total:.1%} |')
+        # (b) the policy ladder: dense psum baseline vs per-policy gather
+        owners = ownership.assign_slice_owners(plan, cost, REFRESH_WORLD)
+        stacks = ex.slice_stack_specs(plan, 'both')
+        psum_full = ex.refresh_exchange_bytes(
+            plan, owners, stacks, REFRESH_WORLD, codec='f32', mode='psum')
+        derived = []
+        for policy in ('dense', 'exclude', 'shard'):
+            cfg = fsh.FactorShardConfig(head_policy=policy)
+            dense_plan, head_pol = fsh.split_plan(plan, cfg)
+            d_owners = ownership.assign_slice_owners(
+                dense_plan, cost, REFRESH_WORLD)
+            d_stacks = ex.slice_stack_specs(dense_plan, 'both')
+            gather = ex.refresh_exchange_bytes(
+                dense_plan, d_owners, d_stacks, REFRESH_WORLD,
+                codec='f32', mode='gather')
+            solve = fsh.shard_psum_bytes(plan, head_pol, cfg)
+            red = psum_full / gather if gather else float('inf')
+            red_s = f'{red:.2f}x' if gather else '∞'
+            pol_lines.append(
+                f'| {arch} | {policy} | {gather * mb:.1f} | {red_s} '
+                f'| {solve * mb:.1f} |')
+            derived.append(f'{policy}_mb={gather * mb:.1f};'
+                           f'{policy}_reduction={red:.2f}')
+            if policy == 'shard':
+                derived.append(f'shard_solve_mb={solve * mb:.1f}')
+        emit(f'roofline/factor_policy/{arch}', 0.0,
+             ';'.join(derived) + f';world={REFRESH_WORLD}')
+    pol_lines += ['', "'shard' removes the head factors from the refresh "
+                  'gather entirely but pays gradient-shaped partial psums '
+                  'at every apply — tune solve_iters (or pick exclude) when '
+                  'the head dominates per-step volume.']
+    return attr_lines + pol_lines
+
+
 def run() -> None:
     recs = load_records()
     lines = ['| arch | shape | mesh | compute_s | memory_s | collective_s | '
@@ -192,6 +271,7 @@ def run() -> None:
              f"dominant={rec['dominant']};useful_ratio="
              f"{rec['useful_flop_ratio']:.2f};mem_gib={mem_gib:.1f}")
     lines += kv_comm_rows()
+    lines += factor_policy_rows()
     out = Path('results/roofline.md')
     out.parent.mkdir(exist_ok=True)
     out.write_text('\n'.join(lines) + '\n')

@@ -22,6 +22,13 @@ worker-sharded ownership with the owned-slice gather exchange (default)
 and the legacy full-stack psum — plus the exchanged-bytes-per-refresh
 table for psum vs gather × codec (identity/bf16/int8), the ROADMAP
 "Refresh-exchange volume" numbers.
+
+``--factor-sharding`` isolates the oversized-factor *apply* stage under the
+same W=4 mesh: the legacy cached two-sided contraction vs the
+``head_policy`` ladder from ``repro.core.factor_sharded`` — 'exclude'
+(identity guard) and 'shard' (matrix-free distributed solve; CG at K-FAC's
+power −1, binomial series at Shampoo's −1/4) — with the shard rows'
+deviation from the dense reference asserted as a CI bound.
 """
 from __future__ import annotations
 
@@ -29,6 +36,7 @@ import os
 import sys
 
 if ('--refresh-sharding' in sys.argv     # must precede the first jax import
+        or '--factor-sharding' in sys.argv
         or '--pipeline' in sys.argv):
     _flags = os.environ.get('XLA_FLAGS', '')
     if '--xla_force_host_platform_device_count' not in _flags:
@@ -242,6 +250,114 @@ def run_refresh_sharding() -> None:
              f'reduction_vs_psum={psum_b / g_b:.2f}x')
 
 
+def run_factor_sharding() -> None:
+    """Per-step apply of one head-proportioned bucket (in-dim dense, out-dim
+    tripping the sub-slice threshold) on a W=4 host-device data mesh: the
+    legacy cached two-sided einsum vs ``head_policy='exclude'`` (identity
+    guard) vs ``'shard'`` (matrix-free distributed solve — CG at K-FAC's
+    power −1, binomial series at Shampoo's −1/4).  Each shard row reports
+    its max deviation from the dense reference (the iterative-tolerance
+    bound the tests pin) and the static partial-psum bytes the solve pays."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import factor_sharded as fsh
+    from repro.core.precondition import kfac_pi_damping
+    from repro.sharding import compat
+
+    if jax.device_count() < 2:
+        raise SystemExit('factor-sharding cell needs multiple host devices '
+                         f'(got {jax.device_count()}; check XLA_FLAGS)')
+    mesh = compat.make_mesh((jax.device_count(),), ('data',))
+    world = jax.device_count()
+
+    key = jax.random.PRNGKey(0)
+    d_in, d_out = 48, 384
+    flat = {'head/w': jax.random.normal(key, (d_in, d_out), jnp.float32)}
+    plan = bucketing.build_plan(flat)
+    (bucket,) = plan.buckets
+
+    def psd(k, d):
+        m = jax.random.normal(k, (d, d))
+        return m @ m.T / d + 0.5 * jnp.eye(d)
+
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 1))
+    m_in = psd(k1, d_in)[None]     # bucket batch dim (N=1 path)
+    m_out = psd(k2, d_out)[None]
+    factors = {bucket.key: (m_in, m_out)}
+    gamma = 0.03
+
+    def smap(body):
+        return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(P(),),
+                                        out_specs=P(), check=False))
+
+    def sharded(method, power, solver, iters):
+        cfg = fsh.FactorShardConfig(head_policy='shard', shard_threshold=256,
+                                    solver=solver, solve_iters=iters)
+        _, pol = fsh.split_plan(plan, cfg)
+        head = fsh.init_head(factors, pol, cfg, plan, method)
+        head = fsh.refresh_head(jnp.asarray(True), factors, head, pol, gamma,
+                                cfg=cfg, plan=plan, method=method)
+        fn = smap(lambda g: fsh.apply_tree(g, plan, pol, head, factors,
+                                           power=power, cfg=cfg,
+                                           site='factor/bench')['head/w'])
+        return fn, fsh.shard_psum_bytes(plan, pol, cfg)
+
+    # --- K-FAC (power −1): cached dense inverses vs exclude vs CG solve ---
+    gamma_r, gamma_q = kfac_pi_damping(m_in, m_out, gamma)
+    a_inv = jnp.linalg.inv(m_in + gamma_r[..., None, None] * jnp.eye(d_in))
+    b_inv = jnp.linalg.inv(m_out + gamma_q[..., None, None] * jnp.eye(d_out))
+    ops = {bucket.key: kvlib.LayerStats(a_outer=a_inv, b_outer=b_inv)}
+    dense_fn = smap(lambda g: pre.precondition_tree(
+        g, ops, 'kfac_cached', gamma, plan=plan)['head/w'])
+
+    ecfg = fsh.FactorShardConfig(head_policy='exclude', shard_threshold=256)
+    _, epol = fsh.split_plan(plan, ecfg)
+    ehead = fsh.refresh_head(jnp.asarray(True), factors,
+                             fsh.init_head(factors, epol, ecfg, plan, 'kfac'),
+                             epol, gamma, cfg=ecfg, plan=plan, method='kfac')
+    excl_fn = smap(lambda g: fsh.apply_tree(g, plan, epol, ehead, factors,
+                                            power=1.0, cfg=ecfg,
+                                            site='factor/bench')['head/w'])
+    cg_fn, cg_bytes = sharded('kfac', 1.0, 'cg', 32)
+
+    ref = dense_fn(flat)
+    t_dense = time_fn(dense_fn, flat)
+    t_excl = time_fn(excl_fn, flat)
+    t_cg = time_fn(cg_fn, flat)
+    cg_dev = float(jnp.max(jnp.abs(cg_fn(flat) - ref)))
+    emit(f'table5/factor/kfac/dense_w{world}', t_dense,
+         f'd_out={d_out};cached_two_sided=1')
+    emit(f'table5/factor/kfac/exclude_w{world}', t_excl,
+         f'd_out={d_out};speedup_vs_dense={t_dense / max(t_excl, 1e-9):.2f}x')
+    emit(f'table5/factor/kfac/shard_cg_w{world}', t_cg,
+         f'd_out={d_out};iters=32;maxdiff_vs_dense={cg_dev:.2e};'
+         f'solve_psum_bytes={cg_bytes:.0f}')
+    if cg_dev > 1e-4:
+        raise SystemExit(f'factor-sharding cell: CG solve deviates '
+                         f'{cg_dev:.2e} from the dense inverse (>1e-4)')
+
+    # --- Shampoo (power −1/4): cached eigh roots vs binomial series ---
+    p_in = pre._inv_proot_psd(m_in, gamma, 0.25)
+    p_out = pre._inv_proot_psd(m_out, gamma, 0.25)
+    sops = {bucket.key: kvlib.LayerStats(a_outer=p_in, b_outer=p_out)}
+    sdense_fn = smap(lambda g: pre.precondition_tree(
+        g, sops, 'shampoo_cached', gamma, plan=plan)['head/w'])
+    bin_fn, bin_bytes = sharded('shampoo', 0.25, 'binomial', 200)
+
+    sref = sdense_fn(flat)
+    t_sdense = time_fn(sdense_fn, flat)
+    t_bin = time_fn(bin_fn, flat)
+    bin_dev = float(jnp.max(jnp.abs(bin_fn(flat) - sref)))
+    emit(f'table5/factor/shampoo/dense_w{world}', t_sdense,
+         f'd_out={d_out};cached_eigh_roots=1')
+    emit(f'table5/factor/shampoo/shard_binomial_w{world}', t_bin,
+         f'd_out={d_out};iters=200;maxdiff_vs_dense={bin_dev:.2e};'
+         f'solve_psum_bytes={bin_bytes:.0f}')
+    if bin_dev > 1e-3:
+        raise SystemExit(f'factor-sharding cell: binomial −1/4 solve '
+                         f'deviates {bin_dev:.2e} from the eigh root (>1e-3)')
+
+
 def run_pipeline(check_overlap: bool = False) -> None:
     """Sync vs onestep curvature pipeline on a W=4 host-device data mesh.
 
@@ -373,6 +489,9 @@ def main() -> None:
     ap.add_argument('--refresh-sharding', action='store_true',
                     help='only the worker-sharded curvature-refresh cell '
                          '(4 host devices, K-FAC inverses)')
+    ap.add_argument('--factor-sharding', action='store_true',
+                    help='only the matrix-free sharded-factor apply cell '
+                         '(4 host devices, dense vs exclude vs shard)')
     ap.add_argument('--pipeline', action='store_true',
                     help='only the sync-vs-onestep curvature pipeline cell '
                          '(4 host devices, eva LM + K-FAC MLP)')
@@ -388,6 +507,8 @@ def main() -> None:
         run_bucketed()
     elif args.refresh_sharding:
         run_refresh_sharding()
+    elif args.factor_sharding:
+        run_factor_sharding()
     elif args.pipeline:
         run_pipeline(check_overlap=args.check_overlap)
     else:

@@ -4,6 +4,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# Everything here runs on CPU (pallas under interpret=True); without the
+# pin, a host that has libtpu installed but no TPU hangs forever in
+# accelerator discovery at the first jax import.  Caller override wins.
+export JAX_PLATFORMS=${JAX_PLATFORMS:-cpu}
 # pytest keeps only the LAST -m, so our 'not multihost' deselect would
 # silently swallow (or be swallowed by) a caller-passed -m; withdraw ours
 # when the caller brings their own marker expression
@@ -29,7 +33,7 @@ fi
 # The gate only runs for the FULL suite (no caller args): a developer
 # narrowing the run with paths/-k/-m is doing a quick loop and must not
 # pay (or be failed by) the ~15-min multihost subprocess cells.
-MULTIHOST_FILES="tests/test_schedule.py tests/test_comm_exchange.py tests/test_pipeline.py"
+MULTIHOST_FILES="tests/test_schedule.py tests/test_comm_exchange.py tests/test_pipeline.py tests/test_factor_sharded.py"
 if [[ "$(uname -s)" == "Linux" && $# -eq 0 ]]; then
   # tee keeps the full output (tracebacks, subprocess stderr) in the CI log;
   # `|| true` so a failing pytest reaches the diagnostic below instead of

@@ -540,6 +540,39 @@ def refresh_exchange_bytes(plan, owners: dict, stacks: Any, world: int, *,
                for b in plan.buckets)
 
 
+def psum_partials(tree: Any, axes: Optional[Sequence[str]], world: int, *,
+                  site: str = 'factor', calls: int = 1,
+                  extra: Optional[dict] = None) -> Any:
+    """Sum full-width per-worker matvec partials — the ONE collective of the
+    matrix-free sharded-factor apply path (``repro.core.factor_sharded``).
+
+    Each worker contributes a full-width f32 partial computed from its owned
+    row band of the factor (``ownership.factor_block``); the factor's zero
+    pad rows contribute zero, so the sum reconstructs the unsharded matvec
+    exactly.  Nothing (d, d)-shaped ever crosses the wire — per-call traffic
+    is gradient-shaped, which is what moves the oversized-factor exchange
+    off the refresh roofline entirely.
+
+    ``calls`` scales the recorded bytes to one full iterative solve: the
+    psum sits inside a ``lax.scan`` body, so this trace-time record fires
+    once per solve, not once per iteration.  W=1 (or no bound axes) is the
+    usual degenerate case: same code path, no collective, mode='local'.
+    """
+    nbytes = tree_payload_bytes(tree, get_codec('f32')) * max(1, int(calls))
+    info = {'world': int(world)}
+    if extra:
+        info.update(extra)
+    collective = world > 1 and bool(axes)
+    if site:
+        metrics.record(site, bytes_per_call=nbytes, codec='f32',
+                       mode='psum-partial' if collective else 'local',
+                       extra=info)
+    if not collective:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.psum(x.astype(jnp.float32), _axis_arg(axes)), tree)
+
+
 def slice_stack_specs(plan, sides: str = 'both') -> dict:
     """ShapeDtypeStruct stacks mirroring what ``sharded_refresh`` exchanges
     for a dense-factor method: per bucket a (N·lead, d_in, d_in) cached

@@ -30,6 +30,7 @@ from repro.core.transform import (Extras, GradientTransformation, chain,
                                   scale_by_schedule)
 from repro.schedule import (ownership, pipeline as pipemod,
                             policy as schedpol, runtime as schedrt)
+from repro.core import factor_sharded as fsh
 
 
 class KfacState(NamedTuple):
@@ -41,6 +42,9 @@ class KfacState(NamedTuple):
     # 'refresh': PipelineState (age only — a_inv/b_inv double as the
     # in-flight inverse buffer)}.  None in sync mode.
     pipe: Any = None
+    # sharded-factor head buckets (Extras.factor tripped): cached dense-side
+    # operators + frozen dampings.  None on the all-dense legacy path.
+    head: Any = None
 
 
 def _damped_inv(m: jnp.ndarray, gamma) -> jnp.ndarray:
@@ -64,15 +68,23 @@ def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
         zeros = bucketing.gather_tree(
             plan, _zeros_like_spec(_extract(extras.stats, fields)))
         run = kvlib.init_running(zeros)
-        a_inv = {k: jnp.zeros_like(st.a_outer) for k, st in run.stats.items()}
-        b_inv = {k: jnp.zeros_like(st.b_outer) for k, st in run.stats.items()}
+        fcfg = fsh.from_extras(extras)
+        _, head_pol = fsh.split_plan(plan, fcfg)
+        a_inv = {k: jnp.zeros_like(st.a_outer)
+                 for k, st in run.stats.items() if k not in head_pol}
+        b_inv = {k: jnp.zeros_like(st.b_outer)
+                 for k, st in run.stats.items() if k not in head_pol}
+        head = fsh.init_head(
+            {k: (run.stats[k].a_outer, run.stats[k].b_outer)
+             for k in head_pol}, head_pol, fcfg, plan, 'kfac')
         rt = schedrt.from_extras(extras)
         pol = rt.resolve(policy, interval)
         pipe = ({'stats': pipemod.init_state(zeros),
                  'refresh': pipemod.init_state()}
                 if rt.pipeline == 'onestep' else None)
         return KfacState(running=run, a_inv=a_inv, b_inv=b_inv,
-                         sched=schedpol.init_state(pol, run.stats), pipe=pipe)
+                         sched=schedpol.init_state(pol, run.stats), pipe=pipe,
+                         head=head)
 
     def update(updates, state: KfacState, params=None, extras: Extras | None = None):
         del params
@@ -97,10 +109,13 @@ def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
             gamma_r, gamma_q = pre.kfac_pi_damping(ao, bo, gamma)
             return _damped_inv(ao, gamma_r), _damped_inv(bo, gamma_q)
 
+        fcfg = fsh.from_extras(extras)
+        dense_plan, head_pol = fsh.split_plan(plan, fcfg)
         refresh, staleness = pol.decide(state.sched, stats)
         staged = schedrt.sharded_refresh(
-            plan, refresh, one,
-            {k: (st.a_outer, st.b_outer) for k, st in stats.items()},
+            dense_plan, refresh, one,
+            {k: (st.a_outer, st.b_outer) for k, st in stats.items()
+             if k not in head_pol},
             {k: (state.a_inv[k], state.b_inv[k]) for k in state.a_inv},
             cost=ownership.inverse_cost('both'), shard=rt.shard_refresh,
             comm=comm, site='refresh/kfac',
@@ -113,14 +128,25 @@ def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
             new_pipe = {'stats': pipe_stats, 'refresh': pipe_ref}
         a_inv = {k: v[0] for k, v in new.items()}
         b_inv = {k: v[1] for k, v in new.items()}
+        # head buckets never enter the refresh exchange: the small dense
+        # side is recomputed replicated under the same gate, the oversized
+        # side is applied matrix-free from the live EMA (factor_sharded)
+        head_factors = {k: (stats[k].a_outer, stats[k].b_outer)
+                        for k in head_pol}
+        head = fsh.refresh_head(refresh, head_factors, state.head, head_pol,
+                                gamma, cfg=fcfg, plan=plan, method='kfac')
         sched = schedpol.commit(pol, state.sched, stats, refresh, staleness)
 
         ops = {k: kvlib.LayerStats(a_outer=used[k][0], b_outer=used[k][1])
                for k in used}
-        out = pre.precondition_tree(flat, ops, 'kfac_cached', gamma, plan=plan)
+        out = pre.precondition_tree(flat, ops, 'kfac_cached', gamma,
+                                    plan=dense_plan)
+        if head_pol:
+            out = fsh.apply_tree(out, plan, head_pol, head, head_factors,
+                                 power=1.0, cfg=fcfg, site='factor/kfac')
         return kvlib.unflatten_params(out), KfacState(
             running=running, a_inv=a_inv, b_inv=b_inv, sched=sched,
-            pipe=new_pipe)
+            pipe=new_pipe, head=head)
 
     return GradientTransformation(init, update)
 

@@ -28,6 +28,7 @@ from repro.core.transform import (Extras, GradientTransformation, chain,
                                   scale_by_schedule)
 from repro.schedule import (ownership, pipeline as pipemod,
                             policy as schedpol, runtime as schedrt)
+from repro.core import factor_sharded as fsh
 
 
 class ShampooState(NamedTuple):
@@ -40,6 +41,9 @@ class ShampooState(NamedTuple):
     # double as the in-flight root buffer)}.  Shampoo accumulates from local
     # grads (no stats collective), so only the refresh exchange is staged.
     pipe: Any = None
+    # sharded-factor head buckets (Extras.factor tripped): cached dense-side
+    # roots + frozen dampings.  None on the all-dense legacy path.
+    head: Any = None
 
 
 def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
@@ -62,12 +66,18 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
         pol = rt.resolve(policy, interval)
         pipe = ({'refresh': pipemod.init_state()}
                 if rt.pipeline == 'onestep' else None)
+        fcfg = fsh.from_extras(extras)
+        _, head_pol = fsh.split_plan(plan, fcfg)
+        head = fsh.init_head({k: (m_in[k], m_out[k]) for k in head_pol},
+                             head_pol, fcfg, plan, 'shampoo')
         return ShampooState(
             m_in=m_in, m_out=m_out,
-            p_in=jax.tree_util.tree_map(jnp.zeros_like, m_in),
-            p_out=jax.tree_util.tree_map(jnp.zeros_like, m_out),
+            p_in={k: jnp.zeros_like(v) for k, v in m_in.items()
+                  if k not in head_pol},
+            p_out={k: jnp.zeros_like(v) for k, v in m_out.items()
+                   if k not in head_pol},
             sched=schedpol.init_state(pol, {'m_in': m_in, 'm_out': m_out}),
-            pipe=pipe)
+            pipe=pipe, head=head)
 
     def update(updates, state: ShampooState, params=None, extras: Extras | None = None):
         del params
@@ -92,9 +102,11 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
             return (pre._inv_proot_psd(mi, gamma, 0.25),
                     pre._inv_proot_psd(mo, gamma, 0.25))
 
+        fcfg = fsh.from_extras(extras)
+        dense_plan, head_pol = fsh.split_plan(plan, fcfg)
         staged = schedrt.sharded_refresh(
-            plan, refresh, one,
-            {k: (m_in[k], m_out[k]) for k in m_in},
+            dense_plan, refresh, one,
+            {k: (m_in[k], m_out[k]) for k in m_in if k not in head_pol},
             {k: (state.p_in[k], state.p_out[k]) for k in state.p_in},
             cost=ownership.inverse_cost('both'), shard=rt.shard_refresh,
             comm=comm_exchange.from_extras(extras), site='refresh/shampoo',
@@ -107,14 +119,24 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
             new_pipe = {'refresh': pipe_ref}
         p_in = {k: v[0] for k, v in new.items()}
         p_out = {k: v[1] for k, v in new.items()}
+        # head buckets skip the root refresh + exchange entirely: the
+        # oversized side is applied matrix-free (binomial series for the
+        # −1/4 root) from the live accumulator in factor_sharded
+        head_factors = {k: (m_in[k], m_out[k]) for k in head_pol}
+        head = fsh.refresh_head(refresh, head_factors, state.head, head_pol,
+                                gamma, cfg=fcfg, plan=plan, method='shampoo')
         sched = schedpol.commit(pol, state.sched, accum, refresh, staleness)
 
         ops = {k: kvlib.LayerStats(a_outer=used[k][0], b_outer=used[k][1])
                for k in used}
-        out = pre.precondition_tree(flat, ops, 'shampoo_cached', gamma, plan=plan)
+        out = pre.precondition_tree(flat, ops, 'shampoo_cached', gamma,
+                                    plan=dense_plan)
+        if head_pol:
+            out = fsh.apply_tree(out, plan, head_pol, head, head_factors,
+                                 power=0.25, cfg=fcfg, site='factor/shampoo')
         return kvlib.unflatten_params(out), ShampooState(
             m_in=m_in, m_out=m_out, p_in=p_in, p_out=p_out, sched=sched,
-            pipe=new_pipe)
+            pipe=new_pipe, head=head)
 
     return GradientTransformation(init, update)
 

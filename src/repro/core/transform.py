@@ -46,6 +46,11 @@ class Extras:
         uses and whether the refresh exchange is the owned-slice
         all-gather or the legacy full-stack psum.  Omitting it means the
         defaults (f32 stats/refresh, owned-slice refresh exchange).
+      factor: optional ``repro.core.factor_sharded.FactorShardConfig`` —
+        the per-factor execution policy for oversized Kronecker factors
+        (``head_policy='shard'|'exclude'|'dense'``, the sub-slice
+        ``shard_threshold`` and the iterative-solver knobs).  Omitting it
+        keeps every factor on the dense legacy path, bit-exactly.
     """
 
     raw_grads: Any = None
@@ -55,6 +60,7 @@ class Extras:
     plan: Any = None
     sched: Any = None
     comm: Any = None
+    factor: Any = None
 
 
 class GradientTransformation(NamedTuple):

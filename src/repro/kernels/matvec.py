@@ -78,6 +78,105 @@ def matvec(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
     return out[:d_out] if pad_out else out
 
 
+def _matvec_cols_kernel(g_ref, a_ref, o_ref):
+    i = pl.program_id(2)  # reduction index (band-row blocks)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    a = a_ref[0].astype(jnp.float32)
+    o_ref[0] += _tile_matvec(g, a)
+
+
+@functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
+def matvec_cols(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
+                block_out: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """Column-blocked partial matvec  U_w = A_w G_w  for factor sharding.
+
+    ``g``: (m, n) — one worker's contiguous row band of a symmetric (n, n)
+    factor B (m = band rows; symmetry makes the row band the transposed
+    column block, so the band partial is the column-block partial).
+    ``a``: (R, m) — the matching owned columns of R stacked vectors.
+    Returns (R, n) f32 *partials*: full output width, 1/W of the FLOPs;
+    summing the partials over all bands (one zero-padded psum) reconstructs
+    ``A B`` exactly — zero pad rows contribute zero.
+
+    Same tile product as :func:`matvec` (elementwise multiply + axis-0
+    reduction), so per-band partials summed on the host match the unsharded
+    kernel bit-for-bit in f32 accumulation order per tile.
+    """
+    R, m = a.shape
+    m_g, n = g.shape
+    assert m == m_g, (a.shape, g.shape)
+    bm, bn = min(block_in, m), min(block_out, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m or pad_n:
+        g = jnp.pad(g, ((0, pad_m), (0, pad_n)))
+        a = jnp.pad(a, ((0, 0), (0, pad_m)))
+    mp, np_ = g.shape
+    out = pl.pallas_call(
+        _matvec_cols_kernel,
+        # vectors ride the leading grid axis; j outer, i inner accumulation
+        grid=(R, np_ // bn, mp // bm),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda r, j, i: (i, j)),
+            pl.BlockSpec((1, bm), lambda r, j, i: (r, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda r, j, i: (r, j)),
+        out_shape=jax.ShapeDtypeStruct((R, np_), jnp.float32),
+        interpret=interpret,
+    )(g, a.astype(jnp.float32))
+    return out[:, :n] if pad_n else out
+
+
+def _matvec_cols_stacked_kernel(g_ref, a_ref, o_ref):
+    i = pl.program_id(3)  # reduction index (band-row blocks)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[0].astype(jnp.float32)
+    a = a_ref[0, 0].astype(jnp.float32)
+    o_ref[0, 0] += _tile_matvec(g, a)
+
+
+@functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
+def matvec_cols_stacked(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
+                        block_out: int = 512,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Stacked :func:`matvec_cols`: one launch per parameter bucket.
+
+    ``g``: (L, m, n) row bands of L factors; ``a``: (L, R, m) owned columns
+    of R vectors per factor -> (L, R, n) f32 partials.  The factor stack
+    rides the leading grid axis exactly like :func:`matvec_stacked`."""
+    L, R, m = a.shape
+    Lg, m_g, n = g.shape
+    assert (L, m) == (Lg, m_g), (a.shape, g.shape)
+    bm, bn = min(block_in, m), min(block_out, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m or pad_n:
+        g = jnp.pad(g, ((0, 0), (0, pad_m), (0, pad_n)))
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad_m)))
+    mp, np_ = g.shape[1:]
+    out = pl.pallas_call(
+        _matvec_cols_stacked_kernel,
+        grid=(L, R, np_ // bn, mp // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda l, r, j, i: (l, i, j)),
+            pl.BlockSpec((1, 1, bm), lambda l, r, j, i: (l, r, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bn), lambda l, r, j, i: (l, r, j)),
+        out_shape=jax.ShapeDtypeStruct((L, R, np_), jnp.float32),
+        interpret=interpret,
+    )(g, a.astype(jnp.float32))
+    return out[:, :, :n] if pad_n else out
+
+
 @functools.partial(jax.jit, static_argnames=('block_in', 'block_out', 'interpret'))
 def matvec_stacked(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
                    block_out: int = 512, interpret: bool = True) -> jnp.ndarray:

@@ -41,6 +41,16 @@ def main() -> None:
     ap.add_argument('--profile', action='store_true',
                     help='span-fenced phased step + memory/HLO telemetry '
                          '(repro.obs; slight overhead, donation off)')
+    ap.add_argument('--head-policy', default='dense',
+                    choices=['dense', 'exclude', 'shard'],
+                    help='oversized-factor policy (core.factor_sharded): '
+                         'dense = legacy, exclude = MKOR-style identity '
+                         'guard, shard = matrix-free distributed solve')
+    ap.add_argument('--head-threshold', type=int, default=65536,
+                    help='factor dim at/above which --head-policy applies '
+                         '(vocab-scale factors by default)')
+    ap.add_argument('--solve-iters', type=int, default=32,
+                    help="iterations of the head-policy='shard' solve")
     ap.add_argument('--out-dir', default='runs/launch')
     ap.add_argument('--no-prefetch', action='store_true')
     ap.add_argument('--distributed', action='store_true',
@@ -73,10 +83,17 @@ def main() -> None:
         paths = set(model.precon_paths()) & set(kvlib.flatten_params(params))
         token_shape = (args.batch, args.seq_len)
         taps_fn = lambda p: kvlib.make_full_taps(p, paths, token_shape)
+    factor = None
+    if args.head_policy != 'dense':
+        from repro.core.factor_sharded import FactorShardConfig
+        factor = FactorShardConfig(head_policy=args.head_policy,
+                                   shard_threshold=args.head_threshold,
+                                   solve_iters=args.solve_iters)
     tc = TrainerConfig(total_steps=args.steps, log_every=args.log_every,
                        ckpt_every=args.ckpt_every, profile=args.profile,
                        out_dir=f'{args.out_dir}/{cfg.name}-{args.opt}')
-    Trainer(model, opt, capture, tc, taps_fn=taps_fn).fit(params, data)
+    Trainer(model, opt, capture, tc, taps_fn=taps_fn,
+            factor=factor).fit(params, data)
 
 
 if __name__ == '__main__':

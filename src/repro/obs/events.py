@@ -39,6 +39,7 @@ from pathlib import Path
 from typing import Any, Optional
 
 from repro.comm import metrics as comm_metrics
+from repro.core import factor_sharded as _fsh
 from repro.schedule import pipeline as _pipemod
 from repro.schedule import runtime as _schedrt
 
@@ -75,6 +76,7 @@ SCHEMAS: dict[str, dict[str, Field]] = {
         'exchanged_mb_cum': Field(_NUM, unit='MiB'),
         **_declared(_schedrt),
         **_declared(_pipemod),
+        **_declared(_fsh),
     },
     # one per realized curvature refresh (derived from the cumulative
     # counter crossing between steps)
@@ -135,6 +137,9 @@ _SITE_FIELDS = {
     'pods': Field((list, tuple), unit='(n_pods, pod_size)'),
     'ici_bytes': Field(_INT, unit='B'),
     'dcn_bytes': Field(_INT, unit='B'),
+    # sharded-factor apply sites (factor/*) — optional, no version bump
+    'solve_iters': Field(_INT, unit='iterations per solve'),
+    'factor_shard_bytes': Field(_INT, unit='B of factor band per worker'),
 }
 
 
@@ -215,6 +220,9 @@ def step_fields(metrics: dict) -> dict:
     for key, value in metrics.items():
         if key.startswith('pipeline_lag'):
             out[key] = int(value)
+    if 'factor_solve_iters' in metrics:
+        out['factor_solve_iters'] = int(metrics['factor_solve_iters'])
+        out['factor_shard_bytes'] = float(metrics['factor_shard_bytes'])
     return out
 
 

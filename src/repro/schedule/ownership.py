@@ -207,6 +207,63 @@ def describe_ownership(plan: BucketPlan, world: int,
 
 
 # ---------------------------------------------------------------------------
+# Sub-slice (column-block) ownership — granularity BELOW one slice
+#
+# Slice-granular ownership bottoms out at one (lead-slice, d, d) factor per
+# owner: a single un-stackable oversized factor (glm4-9b's 151552-wide vocab
+# head) is then owned whole by ONE worker and caps the W=4 exchange
+# reduction at 1.71x.  These helpers partition the rows/columns of one such
+# factor across ALL workers as contiguous row bands, which the matrix-free
+# apply path (repro.core.factor_sharded) turns into per-worker partial
+# matvecs completed by a single zero-padded psum.
+
+
+def factor_block(d: int, world: int) -> int:
+    """Rows per worker when one (d, d) factor is column-block partitioned:
+    ``ceil(d / world)``.  Worker ``w`` holds the contiguous row band
+    ``[w*B, (w+1)*B)`` of the zero-padded ``(world*B, d)`` factor.  Every
+    row of a single symmetric factor costs the same, so the uniform
+    contiguous split IS the LPT partition at this granularity (per-worker
+    loads differ by at most one row) — no greedy pass needed."""
+    return -(-int(d) // int(world))
+
+
+def assign_subslice_owners(d: int, world: int) -> np.ndarray:
+    """(world,) int64: row band ``b`` of the factor is owned by worker
+    ``b`` — the uniform LPT map below slice granularity, returned as an
+    explicit owner array so describe/logging paths treat factor bands like
+    any other ownership map."""
+    return np.arange(int(world), dtype=np.int64)
+
+
+def subslice_trips(bucket: Bucket, threshold: int) -> tuple[bool, bool]:
+    """(in_side, out_side): which factor sides of ``bucket`` exceed the
+    sub-slice ``shard_threshold`` (factor dim >= threshold).  The policy
+    knob (``repro.core.factor_sharded.FactorShardConfig``) decides WHAT to
+    do with a tripped side ('shard' | 'exclude' | keep 'dense'); this is
+    only the structural trigger."""
+    d_in, d_out = int(bucket.shape[-2]), int(bucket.shape[-1])
+    return d_in >= int(threshold), d_out >= int(threshold)
+
+
+def describe_subslices(plan: BucketPlan, world: int,
+                       threshold: int) -> dict[str, list[int]]:
+    """JSON-able per-worker row-band sizes for every tripped factor side
+    (trainer logging, alongside :func:`describe_ownership`):
+    ``{'<bucket_key>/<in|out>': [rows owned by worker 0, 1, ...]}``."""
+    out: dict[str, list[int]] = {}
+    for b in plan.buckets:
+        trips = subslice_trips(b, threshold)
+        for side, tripped, d in (('in', trips[0], int(b.shape[-2])),
+                                 ('out', trips[1], int(b.shape[-1]))):
+            if tripped:
+                blk = factor_block(d, world)
+                out[f'{b.key}/{side}'] = [
+                    max(0, min(blk, d - w * blk)) for w in range(world)]
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Mesh introspection (trace-time)
 
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import bucketing
 from repro.core import kv as kvlib
+from repro.core import factor_sharded as fsh
 from repro.core.transform import Extras, GradientTransformation, apply_updates
 from repro.schedule import pipeline as pipemod, runtime as schedrt
 
@@ -80,7 +81,8 @@ def make_train_step(model, opt: GradientTransformation,
                     donate: bool = True,
                     microbatches: int = 1,
                     sched: Optional[schedrt.RefreshRuntime] = None,
-                    comm: Optional[Any] = None) -> Callable:
+                    comm: Optional[Any] = None,
+                    factor: Optional[Any] = None) -> Callable:
     """Build the pure train step.  ``taps_fn(params)`` overrides tap creation
     (needed for full-tap K-FAC on the simple models).
 
@@ -93,6 +95,11 @@ def make_train_step(model, opt: GradientTransformation,
     through ``Extras.comm``: which codec the statistics reduction and the
     owned-slice curvature-refresh exchange use under a live data-parallel
     mesh (None = defaults: f32 wire, owned-slice all-gather refresh).
+
+    ``factor`` is the ``repro.core.factor_sharded.FactorShardConfig``
+    threaded through ``Extras.factor``: the per-factor oversized-Kronecker
+    policy (``head_policy='shard'|'exclude'|'dense'``).  None keeps every
+    factor on the dense legacy path, bit-exactly.
 
     ``microbatches > 1`` runs gradient accumulation: the global batch is
     split on dim 0 and scanned, summing grads (f32) and averaging KV stats.
@@ -143,7 +150,7 @@ def make_train_step(model, opt: GradientTransformation,
             grads, opt_state, params=params,
             extras=Extras(stats=stats, loss=loss,
                           plan=_plan_for_stats(grads, stats), sched=sched,
-                          comm=comm))
+                          comm=comm, factor=factor))
         new_params = apply_updates(params, updates)
         grad_norm = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
@@ -154,6 +161,8 @@ def make_train_step(model, opt: GradientTransformation,
         metrics.update(schedrt.schedule_metrics(new_opt_state))
         # realized pipeline staleness per exchange site ({} in sync mode)
         metrics.update(pipemod.pipeline_metrics(new_opt_state))
+        # sharded-factor telemetry ({} unless a factor policy tripped)
+        metrics.update(fsh.step_metrics(new_opt_state))
         return new_params, new_opt_state, metrics
 
     return train_step
@@ -163,7 +172,8 @@ def make_phased_step(model, opt: GradientTransformation,
                      capture: kvlib.CaptureConfig,
                      taps_fn: Optional[Callable] = None,
                      sched: Optional[schedrt.RefreshRuntime] = None,
-                     comm: Optional[Any] = None
+                     comm: Optional[Any] = None,
+                     factor: Optional[Any] = None
                      ) -> tuple[Callable, Callable, Callable]:
     """The train step split at phase boundaries for span-level timing
     (``repro.obs``): grad → precondition (= optimizer update, where the
@@ -191,13 +201,15 @@ def make_phased_step(model, opt: GradientTransformation,
             grads, opt_state, params=params,
             extras=Extras(stats=stats, loss=loss,
                           plan=_plan_for_stats(grads, stats), sched=sched,
-                          comm=comm))
+                          comm=comm, factor=factor))
         grad_norm = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
             for g in jax.tree_util.tree_leaves(grads)))
         metrics = {'loss': loss, 'grad_norm': grad_norm}
         metrics.update(schedrt.schedule_metrics(new_opt_state))
         metrics.update(pipemod.pipeline_metrics(new_opt_state))
+        # sharded-factor telemetry ({} unless a factor policy tripped)
+        metrics.update(fsh.step_metrics(new_opt_state))
         return updates, new_opt_state, metrics
 
     def apply_fn(params, updates):
@@ -210,12 +222,14 @@ def init_opt_state(model, opt: GradientTransformation,
                    capture: kvlib.CaptureConfig, params, batch,
                    taps_fn: Optional[Callable] = None,
                    sched: Optional[schedrt.RefreshRuntime] = None,
-                   comm: Optional[Any] = None):
+                   comm: Optional[Any] = None,
+                   factor: Optional[Any] = None):
     """Materialized optimizer state (examples/trainer).  ``batch`` may be
     arrays or ShapeDtypeStructs — stats shapes come from eval_shape."""
     sched = sched if sched is not None else schedrt.RefreshRuntime()
     if not capture.active:
-        return opt.init(params, Extras(sched=sched, comm=comm))
+        return opt.init(params, Extras(sched=sched, comm=comm,
+                                       factor=factor))
 
     def stats_of(p, b):
         taps = taps_fn(p) if taps_fn is not None else None
@@ -227,7 +241,7 @@ def init_opt_state(model, opt: GradientTransformation,
         lambda s: jnp.zeros(s.shape, s.dtype), stats_shapes)
     return opt.init(params, Extras(stats=zero_stats,
                                    plan=_plan_for_stats(params, zero_stats),
-                                   sched=sched, comm=comm))
+                                   sched=sched, comm=comm, factor=factor))
 
 
 def stats_plan_of(model, capture: kvlib.CaptureConfig, params, batch,
@@ -250,9 +264,10 @@ def abstract_opt_state(model, opt: GradientTransformation,
                        capture: kvlib.CaptureConfig, params_abstract, batch_specs,
                        taps_fn: Optional[Callable] = None,
                        sched: Optional[schedrt.RefreshRuntime] = None,
-                       comm: Optional[Any] = None):
+                       comm: Optional[Any] = None,
+                       factor: Optional[Any] = None):
     """ShapeDtypeStruct pytree of the optimizer state (dry-run path)."""
     def init_fn(p, b):
         return init_opt_state(model, opt, capture, p, b, taps_fn, sched=sched,
-                              comm=comm)
+                              comm=comm, factor=factor)
     return jax.eval_shape(init_fn, params_abstract, batch_specs)

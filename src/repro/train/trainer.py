@@ -60,7 +60,7 @@ class Trainer:
                  capture: kvlib.CaptureConfig, cfg: TrainerConfig,
                  taps_fn: Optional[Callable] = None,
                  sched: Optional[schedrt.RefreshRuntime] = None,
-                 comm=None):
+                 comm=None, factor=None):
         self.model = model
         self.opt = opt
         self.capture = capture
@@ -68,12 +68,15 @@ class Trainer:
         self.taps_fn = taps_fn
         self.sched = sched if sched is not None else schedrt.RefreshRuntime()
         self.comm = comm
+        # per-factor oversized-Kronecker policy (core.factor_sharded);
+        # None = every factor dense, the bit-exact legacy path
+        self.factor = factor
         self.out_dir = Path(cfg.out_dir)
         self.out_dir.mkdir(parents=True, exist_ok=True)
         self.ckpt_dir = self.out_dir / 'ckpt'
         self._ckptr = ckpt.AsyncCheckpointer(self.ckpt_dir, cfg.keep_ckpts)
         step_fn = make_train_step(model, opt, capture, taps_fn=taps_fn,
-                                  sched=self.sched, comm=comm)
+                                  sched=self.sched, comm=comm, factor=factor)
         self.step_fn = jax.jit(step_fn,
                                donate_argnums=(0, 1)
                                if cfg.donate and not cfg.profile else ())
@@ -83,7 +86,7 @@ class Trainer:
             # but donation is off so a fenced phase's inputs stay alive
             self._phases = tuple(jax.jit(f) for f in make_phased_step(
                 model, opt, capture, taps_fn=taps_fn, sched=self.sched,
-                comm=comm))
+                comm=comm, factor=factor))
         self._watchdog = obs_spans.StragglerWatchdog(cfg.straggler_factor)
         self._preempted = False
         self.metrics_path = self.out_dir / 'metrics.jsonl'
@@ -197,7 +200,8 @@ class Trainer:
                                                 data.batch_at(0),
                                                 taps_fn=self.taps_fn,
                                                 sched=self.sched,
-                                                comm=self.comm)}
+                                                comm=self.comm,
+                                                factor=self.factor)}
                 state, meta = ckpt.restore(self.ckpt_dir, latest, template)
                 params, opt_state = state['params'], state['opt_state']
                 start_step = meta.get('next_step', latest)
@@ -207,7 +211,7 @@ class Trainer:
             opt_state = init_opt_state(self.model, self.opt, self.capture,
                                        params, data.batch_at(start_step),
                                        taps_fn=self.taps_fn, sched=self.sched,
-                                       comm=self.comm)
+                                       comm=self.comm, factor=self.factor)
 
         # refresh count already in the (possibly restored) state — the
         # cumulative exchanged-bytes estimate below must count only THIS

@@ -371,7 +371,10 @@ def test_owned_slice_exchange_matches_psum_all_methods():
     out = subprocess.run(
         [sys.executable, '-c', _EQUIV_SCRIPT],
         capture_output=True, text=True, timeout=1800,
-        env={'PYTHONPATH': 'src', 'PATH': '/usr/bin:/bin', 'HOME': '/root'},
+        # JAX_PLATFORMS pinned: the scrubbed env must not fall through to
+        # accelerator discovery (libtpu-on-a-TPU-less-host hangs forever)
+        env={'PYTHONPATH': 'src', 'PATH': '/usr/bin:/bin', 'HOME': '/root',
+             'JAX_PLATFORMS': 'cpu'},
         cwd=Path(__file__).resolve().parent.parent)
     assert out.returncode == 0, out.stderr[-3000:]
     rec = json.loads(out.stdout.strip().splitlines()[-1])

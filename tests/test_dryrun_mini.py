@@ -44,8 +44,10 @@ def _run(arch: str, kind: str) -> dict:
     out = subprocess.run(
         [sys.executable, '-c', SCRIPT, arch, kind],
         capture_output=True, text=True, timeout=600,
+        # JAX_PLATFORMS pinned: the scrubbed env must not fall through to
+        # accelerator discovery (libtpu-on-a-TPU-less-host hangs forever)
         env={'PYTHONPATH': 'src', 'PATH': '/usr/bin:/bin',
-             'HOME': '/root'},
+             'HOME': '/root', 'JAX_PLATFORMS': 'cpu'},
         cwd=Path(__file__).resolve().parent.parent)
     assert out.returncode == 0, out.stderr[-3000:]
     return json.loads(out.stdout.strip().splitlines()[-1])

@@ -565,7 +565,10 @@ def test_sharded_refresh_matches_single_host():
     out = subprocess.run(
         [sys.executable, '-c', _SHARD_SCRIPT],
         capture_output=True, text=True, timeout=600,
-        env={'PYTHONPATH': 'src', 'PATH': '/usr/bin:/bin', 'HOME': '/root'},
+        # JAX_PLATFORMS pinned: the scrubbed env must not fall through to
+        # accelerator discovery (libtpu-on-a-TPU-less-host hangs forever)
+        env={'PYTHONPATH': 'src', 'PATH': '/usr/bin:/bin', 'HOME': '/root',
+             'JAX_PLATFORMS': 'cpu'},
         cwd=Path(__file__).resolve().parent.parent)
     assert out.returncode == 0, out.stderr[-3000:]
     rec = json.loads(out.stdout.strip().splitlines()[-1])
