@@ -33,7 +33,7 @@ fi
 # The gate only runs for the FULL suite (no caller args): a developer
 # narrowing the run with paths/-k/-m is doing a quick loop and must not
 # pay (or be failed by) the ~15-min multihost subprocess cells.
-MULTIHOST_FILES="tests/test_schedule.py tests/test_comm_exchange.py tests/test_pipeline.py tests/test_factor_sharded.py"
+MULTIHOST_FILES="tests/test_schedule.py tests/test_comm_exchange.py tests/test_pipeline.py tests/test_factor_sharded.py tests/test_elastic.py"
 if [[ "$(uname -s)" == "Linux" && $# -eq 0 ]]; then
   # tee keeps the full output (tracebacks, subprocess stderr) in the CI log;
   # `|| true` so a failing pytest reaches the diagnostic below instead of

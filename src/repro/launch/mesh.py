@@ -12,6 +12,7 @@ only gradient all-reduces cross it).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.sharding import compat
 
@@ -26,3 +27,21 @@ def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever this host actually has (tests / examples): (n_dev, 1)."""
     n = jax.device_count()
     return compat.make_mesh((n, 1), ("data", "model"))
+
+
+def make_data_mesh(world: int | None = None) -> jax.sharding.Mesh:
+    """A 1-D pure-DP ``('data',)`` mesh over the first ``world`` local
+    devices — the elastic trainer's mesh (``Trainer.fit_elastic``).
+
+    ``world`` may be *smaller* than the host's device count: an elastic
+    resize that drops workers keeps running on the surviving device prefix
+    (the extra devices just idle), which is how the chaos tests model a
+    W=4 → W=2 shrink inside one host.  Built directly from a device subset
+    rather than ``compat.make_mesh`` (``jax.make_mesh`` always spans every
+    addressable device)."""
+    devices = jax.devices()
+    world = len(devices) if world is None else int(world)
+    if not 1 <= world <= len(devices):
+        raise ValueError(f'world must be in [1, {len(devices)}] '
+                         f'(local devices), got {world}')
+    return jax.sharding.Mesh(np.asarray(devices[:world]), ("data",))

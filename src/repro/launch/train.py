@@ -55,6 +55,13 @@ def main() -> None:
     ap.add_argument('--no-prefetch', action='store_true')
     ap.add_argument('--distributed', action='store_true',
                     help='call jax.distributed.initialize() (multi-host pods)')
+    ap.add_argument('--elastic', action='store_true',
+                    help='elastic outer loop (Trainer.fit_elastic): explicit '
+                         'DP over --world local devices; checkpoints reshard '
+                         'across world sizes (docs/CHECKPOINT_FORMAT.md)')
+    ap.add_argument('--world', type=int, default=0,
+                    help='data-parallel worker count for --elastic '
+                         '(0 = every local device)')
     args = ap.parse_args()
 
     if args.distributed:
@@ -79,10 +86,11 @@ def main() -> None:
     opt, capture = make_optimizer(args.opt, lr=args.lr)
     taps_fn = None
     if capture.b == 'outer':
-        # K-FAC-style capture needs full z-shaped taps (kv.make_full_taps)
+        # K-FAC-style capture needs full z-shaped taps (kv.make_full_taps);
+        # batch-aware so the elastic DP step sizes them to batch/W rows
         paths = set(model.precon_paths()) & set(kvlib.flatten_params(params))
-        token_shape = (args.batch, args.seq_len)
-        taps_fn = lambda p: kvlib.make_full_taps(p, paths, token_shape)
+        taps_fn = lambda p, b: kvlib.make_full_taps(p, paths,
+                                                    b['tokens'].shape)
     factor = None
     if args.head_policy != 'dense':
         from repro.core.factor_sharded import FactorShardConfig
@@ -92,8 +100,12 @@ def main() -> None:
     tc = TrainerConfig(total_steps=args.steps, log_every=args.log_every,
                        ckpt_every=args.ckpt_every, profile=args.profile,
                        out_dir=f'{args.out_dir}/{cfg.name}-{args.opt}')
-    Trainer(model, opt, capture, tc, taps_fn=taps_fn,
-            factor=factor).fit(params, data)
+    trainer = Trainer(model, opt, capture, tc, taps_fn=taps_fn,
+                      factor=factor)
+    if args.elastic:
+        trainer.fit_elastic(params, data, world=args.world or None)
+    else:
+        trainer.fit(params, data)
 
 
 if __name__ == '__main__':

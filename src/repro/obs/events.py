@@ -91,6 +91,21 @@ SCHEMAS: dict[str, dict[str, Field]] = {
         'owners': Field(_DICT, required=True,
                         unit='bucket -> per-worker slice counts'),
     },
+    # elastic resize one-off: a checkpoint written at world_from resumed
+    # at world_to (or a live between-steps resize) — emitted by
+    # Trainer.fit_elastic after schedule.reshard.reshard_state (optional
+    # event type: no version bump)
+    'reshard': {
+        'world_from': Field(_INT, required=True, unit='workers'),
+        'world_to': Field(_INT, required=True, unit='workers'),
+        'pipeline': Field(_STR, required=True,
+                          unit="in-flight buffers: 'drained'|'kept'|'none'"),
+        'source': Field(_STR, required=True,
+                        unit="'checkpoint' (restore) | 'live' (between steps)"),
+        'step': Field(_INT, unit='index'),
+        'slices_total': Field(_INT, unit='owned refresh slices'),
+        'slices_moved': Field(_INT, unit='slices with a new owner'),
+    },
     # post-trace one-off: per-call-site logical exchange bytes (site dicts
     # are validated by _validate_site; codec extras stay open)
     'comm_exchange': {

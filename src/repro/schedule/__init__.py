@@ -11,7 +11,10 @@ recomputation runs.  Three pieces:
 * ``pipeline``  — the double-buffered one-step-stale exchange pipeline
                   (``PipelineState`` buffers, ``pipeline='onestep'``),
 * ``runtime``   — the ``RefreshRuntime`` façade the optimizers and the
-                  train step talk to.
+                  train step talk to,
+* ``reshard``   — elastic checkpoint resharding across world sizes (the
+                  metadata contract, the pipeline drain rule, and the
+                  ownership delta behind the typed ``reshard`` event).
 """
 from repro.schedule.policy import (SchedState, RefreshPolicy, adaptive,
                                    every_k, init_state, commit, named_policy,
@@ -24,6 +27,10 @@ from repro.schedule.runtime import (RefreshRuntime, from_extras,
                                     ownership_event, resolve_pipe,
                                     sched_states, schedule_metrics,
                                     sharded_refresh)
+from repro.schedule.reshard import (ELASTIC_KEY, ReshardError,
+                                    check_metadata, elastic_metadata,
+                                    ownership_delta, plan_fingerprint,
+                                    reshard_state)
 
 __all__ = [
     'SchedState', 'RefreshPolicy', 'every_k', 'warmup_then_k', 'adaptive',
@@ -32,4 +39,6 @@ __all__ = [
     'PipelineState', 'pipe_entries', 'pipeline_metrics', 'staged_pmean',
     'RefreshRuntime', 'from_extras', 'ownership_event', 'resolve_pipe',
     'sched_states', 'schedule_metrics', 'sharded_refresh',
+    'ELASTIC_KEY', 'ReshardError', 'check_metadata', 'elastic_metadata',
+    'ownership_delta', 'plan_fingerprint', 'reshard_state',
 ]

@@ -1,0 +1,236 @@
+"""Checkpoint resharding across world sizes (elastic training).
+
+A checkpoint written at W=4 restores at W=2 or W=8 because the state the
+optimizers carry is deliberately world-agnostic:
+
+* every checkpoint leaf is the full *logical* array (``train/checkpoint``
+  saves replicated values, not per-worker shards), so KV EMAs, cached
+  inverses, ``SchedState`` counters and factor-head state load unchanged
+  at any W;
+* refresh ownership is never stored — ``assign_slice_owners`` /
+  ``assign_subslice_owners`` are deterministic lru-cached functions of
+  ``(BucketPlan, world)`` recomputed at trace time, so re-jitting under
+  the new mesh *is* the reshard of the work assignment;
+* sharded factor-head row bands (``core.factor_sharded``) are computed
+  on the fly from ``factor_block(d, world)`` at apply time — the
+  persisted ``HeadState`` holds replicated EMAs only.
+
+What is left for this module is the part that is genuinely W-dependent:
+
+1. the **elastic metadata block** stamped into every checkpoint
+   (:func:`elastic_metadata`) so a restore knows what world wrote it and
+   whether the bucket plan still matches (:func:`check_metadata`);
+2. the **pipeline drain rule** — in ``pipeline='onestep'`` mode the
+   in-flight :class:`~repro.schedule.pipeline.PipelineState` buffers were
+   reduced over the *old* world's workers.  Their content is replicated
+   and world-agnostic in value, but their staleness bookkeeping refers to
+   an exchange epoch that no longer exists; on a resize the default
+   ``'drain'`` rule zeroes the buffers and resets ``age`` to 0, which is
+   exactly the documented cold-start state (``pipeline.init_state``), so
+   the first post-resize step behaves like step 0 of a fresh pipeline.
+   ``'keep'`` passes the buffers through unchanged (their values are
+   fully-reduced means, valid at any W) for runs that prefer one stale
+   application over one cold step;
+3. the **ownership delta** (:func:`ownership_delta`) — how many owned
+   slices move to a new worker when the maps are re-run at the new W —
+   which feeds the typed ``reshard`` event the trainer emits through
+   ``repro.obs``.
+
+The trainer-side composition (restore → :func:`reshard_state` → rebuild
+mesh → re-jit → continue) lives in ``train/trainer.py::Trainer.fit_elastic``;
+the on-disk contract is documented in docs/CHECKPOINT_FORMAT.md.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketing import BucketPlan
+from repro.schedule import ownership
+from repro.schedule import pipeline as pipeline_mod
+
+# key of the elastic block inside checkpoint metadata (manifest.json)
+ELASTIC_KEY = 'elastic'
+
+PIPELINE_RULES = ('drain', 'keep')
+
+
+class ReshardError(ValueError):
+    """A checkpoint cannot be resharded into this run's configuration."""
+
+
+# ---------------------------------------------------------------------------
+# Metadata contract
+
+
+def plan_fingerprint(plan: Optional[BucketPlan]) -> str:
+    """Stable digest of a bucket plan's structure (keys, shapes, dtypes,
+    member paths).  Two runs whose plans fingerprint equal produce the same
+    ownership maps at every W — the precondition for resharding being pure
+    metadata.  '' when nothing is preconditioned (first-order runs)."""
+    if plan is None or not plan.buckets:
+        return ''
+    h = hashlib.sha256()
+    for b in plan.buckets:
+        h.update(repr((b.key, tuple(int(d) for d in b.shape),
+                       str(jnp.dtype(b.dtype).name), b.paths,
+                       bool(b.stacked))).encode())
+    return h.hexdigest()[:16]
+
+
+def elastic_metadata(world: int, plan: Optional[BucketPlan] = None,
+                     pipeline: str = 'sync') -> dict:
+    """The JSON block a checkpoint's metadata carries under
+    :data:`ELASTIC_KEY` — everything a restore at a different W needs to
+    validate and reshard (docs/CHECKPOINT_FORMAT.md)."""
+    return {'world': int(world),
+            'pipeline': str(pipeline),
+            'plan': plan_fingerprint(plan)}
+
+
+def check_metadata(meta: Optional[dict], plan: Optional[BucketPlan] = None,
+                   pipeline: str = 'sync') -> int:
+    """Validate a checkpoint's elastic block against this run's
+    configuration and return the world size that wrote it.
+
+    A missing block (pre-elastic checkpoint) is accepted and reported as
+    world 0 — the caller treats it as "same world as now".  A bucket-plan
+    fingerprint mismatch is fatal: the ownership maps of the two runs
+    disagree, which means the model/capture/factor configuration changed,
+    not just W.  A pipeline-mode mismatch is fatal for the same reason
+    restore would fail structurally (the state template differs).
+    """
+    if not meta:
+        return 0
+    want = plan_fingerprint(plan)
+    got = meta.get('plan', '')
+    if got != want:
+        raise ReshardError(
+            f'checkpoint bucket plan {got!r} != this run {want!r} — the '
+            'model/capture/factor configuration changed; elastic restore '
+            'only reshards across world sizes (docs/CHECKPOINT_FORMAT.md)')
+    ck_pipe = meta.get('pipeline', 'sync')
+    if ck_pipe != pipeline:
+        raise ReshardError(
+            f'checkpoint pipeline mode {ck_pipe!r} != this run '
+            f'{pipeline!r} — pipeline buffers are part of the state '
+            'structure; restore with the same RefreshRuntime(pipeline=...)')
+    return int(meta.get('world', 0))
+
+
+def check_batch_divisible(batch: Any, world: int) -> None:
+    """Every batch leaf's leading dim must split evenly over the ``'data'``
+    axis — an elastic resize that breaks ``batch % W == 0`` is a
+    configuration error, raised before tracing (shard_map's own error
+    names the spec, not the fix)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(batch)
+    for path, x in flat:
+        dim0 = int(jnp.shape(x)[0]) if jnp.ndim(x) else 0
+        if dim0 % int(world):
+            key = jax.tree_util.keystr(path)
+            raise ReshardError(
+                f'global batch dim {dim0} of {key!r} does not divide over '
+                f'world={world} — elastic resizes must keep batch % W == 0 '
+                '(docs/CHECKPOINT_FORMAT.md)')
+
+
+# ---------------------------------------------------------------------------
+# Ownership delta (telemetry for the typed `reshard` event)
+
+
+def ownership_delta(plan: Optional[BucketPlan], world_from: int,
+                    world_to: int, sides: str = 'both') -> dict:
+    """How the refresh-owner maps move when re-run at the new world size:
+    ``{'slices_total', 'slices_moved'}`` over every bucket's (row ×
+    lead-slice) grid.  Slices whose owner rank changes are the refreshes
+    that warm up on a different worker after the resize — purely
+    informational (ownership is recomputed, never migrated), but exactly
+    the number an operator staring at a post-resize refresh-latency blip
+    wants to see.  {} when nothing is preconditioned."""
+    if plan is None or not plan.buckets:
+        return {}
+    cost = ownership.inverse_cost(sides)
+    a = ownership.assign_slice_owners(plan, cost, max(1, int(world_from)))
+    b = ownership.assign_slice_owners(plan, cost, max(1, int(world_to)))
+    total = moved = 0
+    for key in a:
+        total += int(a[key].size)
+        moved += int(np.sum(a[key] != b[key]))
+    return {'slices_total': total, 'slices_moved': moved}
+
+
+# ---------------------------------------------------------------------------
+# Pipeline drain rule
+
+
+def map_pipeline_states(tree: Any,
+                        fn: Callable[[pipeline_mod.PipelineState],
+                                     pipeline_mod.PipelineState]) -> Any:
+    """Structurally rebuild an optimizer-state pytree with ``fn`` applied
+    to every :class:`PipelineState` (dicts / lists / tuples / NamedTuples
+    preserved; everything else passed through untouched)."""
+    if isinstance(tree, pipeline_mod.PipelineState):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: map_pipeline_states(v, fn) for k, v in tree.items()}
+    if isinstance(tree, tuple):
+        vals = [map_pipeline_states(v, fn) for v in tree]
+        return type(tree)(*vals) if hasattr(tree, '_fields') \
+            else tuple(vals)
+    if isinstance(tree, list):
+        return [map_pipeline_states(v, fn) for v in tree]
+    return tree
+
+
+def _drain_one(pipe: pipeline_mod.PipelineState) -> pipeline_mod.PipelineState:
+    """One slot back to the documented cold start: zeros buffer, age 0 —
+    identical to ``pipeline.init_state(template)``."""
+    buf = None
+    if pipe.inflight is not None:
+        buf = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.asarray(x).dtype),
+            pipe.inflight)
+    return pipeline_mod.PipelineState(inflight=buf,
+                                      age=jnp.zeros((), jnp.int32))
+
+
+def reshard_state(opt_state: Any, *, world_from: int, world_to: int,
+                  plan: Optional[BucketPlan] = None,
+                  step: Optional[int] = None,
+                  pipeline_rule: str = 'drain',
+                  source: str = 'checkpoint') -> tuple[Any, dict]:
+    """Reshard a restored (or live) optimizer state from ``world_from`` to
+    ``world_to`` workers.  Returns ``(opt_state, event_body)`` where the
+    body is a valid ``reshard`` record for ``repro.obs``.
+
+    Leaves are full logical arrays, so the only state transformation is
+    the pipeline rule on a genuine resize: ``'drain'`` (default) resets
+    every in-flight buffer to the cold-start zeros/age-0 state;
+    ``'keep'`` passes them through (values are fully-reduced replicated
+    means, valid at any W).  When ``world_from == world_to`` the state
+    passes through untouched under either rule — the bit-exact resume
+    contract of the non-elastic trainer is preserved.
+    """
+    if pipeline_rule not in PIPELINE_RULES:
+        raise ValueError(f'pipeline_rule must be one of {PIPELINE_RULES}, '
+                         f'got {pipeline_rule!r}')
+    world_from, world_to = int(world_from), int(world_to)
+    resized = world_from != world_to
+    n_pipes = len(pipeline_mod.pipe_entries(opt_state))
+    pipes = 'none'
+    if n_pipes:
+        if resized and pipeline_rule == 'drain':
+            opt_state = map_pipeline_states(opt_state, _drain_one)
+            pipes = 'drained'
+        else:
+            pipes = 'kept'
+    body: dict[str, Any] = {'world_from': world_from, 'world_to': world_to,
+                            'pipeline': pipes, 'source': str(source)}
+    if step is not None:
+        body['step'] = int(step)
+    body.update(ownership_delta(plan, world_from, world_to))
+    return opt_state, body

@@ -8,6 +8,7 @@ dry-run can lower a 1T-param step without allocating anything.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any, Callable, Optional
 
 import jax
@@ -28,6 +29,27 @@ def _plan_for_stats(params_or_grads, stats) -> Optional[bucketing.BucketPlan]:
         return None
     flat = kvlib.flatten_params(params_or_grads)
     return bucketing.build_plan({p: flat[p] for p in stats if p in flat})
+
+
+def taps_caller(taps_fn: Optional[Callable]) -> Callable:
+    """Normalize a taps factory to ``(params, batch) -> taps``.
+
+    Legacy callers close over the global batch size
+    (``lambda p: model.make_taps(32, capture)``), which breaks under the
+    explicit-DP step where each worker sees ``batch/W`` rows — a
+    batch-aware ``taps_fn(params, batch)`` sizes the taps from the batch it
+    is actually handed (global under ``make_train_step``, the local shard
+    under ``make_dp_step``).  Arity is inspected once at factory time, not
+    per trace."""
+    if taps_fn is None:
+        return lambda params, batch: None
+    try:
+        n_args = len(inspect.signature(taps_fn).parameters)
+    except (TypeError, ValueError):
+        n_args = 1
+    if n_args >= 2:
+        return taps_fn
+    return lambda params, batch: taps_fn(params)
 
 
 def _default_make_taps(model, params, capture: kvlib.CaptureConfig):
@@ -107,10 +129,11 @@ def make_train_step(model, opt: GradientTransformation,
     saved-residual and MoE-dispatch peaks shrink by the microbatch factor
     (§Perf memory iteration)."""
     sched = sched if sched is not None else schedrt.RefreshRuntime()
+    make_taps = taps_caller(taps_fn)
 
     def grads_of(params, batch):
-        taps = taps_fn(params) if taps_fn is not None else None
-        return compute_grads_and_stats(model, params, batch, capture, taps)
+        return compute_grads_and_stats(model, params, batch, capture,
+                                       make_taps(params, batch))
 
     def train_step(params, opt_state, batch):
         if microbatches > 1:
@@ -168,6 +191,69 @@ def make_train_step(model, opt: GradientTransformation,
     return train_step
 
 
+def make_dp_step(model, opt: GradientTransformation,
+                 capture: kvlib.CaptureConfig, mesh,
+                 taps_fn: Optional[Callable] = None,
+                 sched: Optional[schedrt.RefreshRuntime] = None,
+                 comm: Optional[Any] = None,
+                 factor: Optional[Any] = None) -> Callable:
+    """Explicit data-parallel train step over ``mesh``'s ``'data'`` axis —
+    the elastic trainer's engine (``train/trainer.py::Trainer.fit_elastic``).
+
+    Params/opt-state replicated, the global batch split over ``'data'``:
+    the loss is ``pmean``'d and the gradients mean-all-reduced in f32
+    (site ``grads/dp``), KV statistics likewise (site ``stats/dp``, axes
+    passed explicitly for the same false-negative-probe reason as
+    ``train/compression.py`` — the optimizer's own ``staged_pmean`` over
+    already-identical values is then exact and idempotent).  The
+    optimizer's update runs with the ``'data'`` axis bound, so
+    worker-sharded refresh and the owned-slice exchange see
+    ``world = mesh 'data' size`` — re-jitting this step under a resized
+    mesh *is* the ownership reshard (``schedule/reshard.py``).
+
+    At W=1 every collective reduces over a size-1 axis (``psum`` of one
+    shard, divide by 1 — exact), so the trajectory is bit-identical to
+    ``make_train_step``: the non-elastic trainer is the W=1 special case,
+    not a separate code path.  Same metrics contract as
+    ``make_train_step``."""
+    sched = sched if sched is not None else schedrt.RefreshRuntime()
+    make_taps = taps_caller(taps_fn)
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm import exchange
+    from repro.sharding import compat
+
+    def local_step(params, opt_state, batch):
+        # NOTE: batch here is the per-worker shard — a batch-aware taps_fn
+        # (see taps_caller) sizes full taps to batch/W rows
+        loss, grads, stats = compute_grads_and_stats(
+            model, params, batch, capture, make_taps(params, batch))
+        loss = jax.lax.pmean(loss, 'data')
+        grads, _, _ = exchange.allreduce_mean_tree(
+            grads, codec='f32', axes=('data',), site='grads/dp')
+        if stats is not None:
+            stats, _, _ = exchange.allreduce_mean_tree(
+                stats, codec='f32', axes=('data',), site='stats/dp')
+        updates, new_opt_state = opt.update(
+            grads, opt_state, params=params,
+            extras=Extras(stats=stats, loss=loss,
+                          plan=_plan_for_stats(grads, stats), sched=sched,
+                          comm=comm, factor=factor))
+        new_params = apply_updates(params, updates)
+        grad_norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        metrics = {'loss': loss, 'grad_norm': grad_norm}
+        metrics.update(schedrt.schedule_metrics(new_opt_state))
+        metrics.update(pipemod.pipeline_metrics(new_opt_state))
+        metrics.update(fsh.step_metrics(new_opt_state))
+        return new_params, new_opt_state, metrics
+
+    return compat.shard_map(local_step, mesh=mesh,
+                            in_specs=(P(), P(), P('data')),
+                            out_specs=(P(), P(), P()), check=False)
+
+
 def make_phased_step(model, opt: GradientTransformation,
                      capture: kvlib.CaptureConfig,
                      taps_fn: Optional[Callable] = None,
@@ -191,10 +277,11 @@ def make_phased_step(model, opt: GradientTransformation,
     update for measurability — see the README overhead caveats).
     """
     sched = sched if sched is not None else schedrt.RefreshRuntime()
+    make_taps = taps_caller(taps_fn)
 
     def grad_fn(params, batch):
-        taps = taps_fn(params) if taps_fn is not None else None
-        return compute_grads_and_stats(model, params, batch, capture, taps)
+        return compute_grads_and_stats(model, params, batch, capture,
+                                       make_taps(params, batch))
 
     def update_fn(grads, stats, loss, opt_state, params):
         updates, new_opt_state = opt.update(
@@ -230,10 +317,11 @@ def init_opt_state(model, opt: GradientTransformation,
     if not capture.active:
         return opt.init(params, Extras(sched=sched, comm=comm,
                                        factor=factor))
+    make_taps = taps_caller(taps_fn)
 
     def stats_of(p, b):
-        taps = taps_fn(p) if taps_fn is not None else None
-        _, _, stats = compute_grads_and_stats(model, p, b, capture, taps)
+        _, _, stats = compute_grads_and_stats(model, p, b, capture,
+                                              make_taps(p, b))
         return stats
 
     stats_shapes = jax.eval_shape(stats_of, params, batch)
@@ -251,10 +339,11 @@ def stats_plan_of(model, capture: kvlib.CaptureConfig, params, batch,
     state (trainer logging: the refresh-ownership map is keyed by it)."""
     if not capture.active:
         return None
+    make_taps = taps_caller(taps_fn)
 
     def stats_of(p, b):
-        taps = taps_fn(p) if taps_fn is not None else None
-        return compute_grads_and_stats(model, p, b, capture, taps)[2]
+        return compute_grads_and_stats(model, p, b, capture,
+                                       make_taps(p, b))[2]
 
     stats_shapes = jax.eval_shape(stats_of, params, batch)
     return _plan_for_stats(params, stats_shapes)

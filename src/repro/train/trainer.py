@@ -20,8 +20,14 @@ Features:
     fn.  Off by default — fencing serializes phases (see README
     "Observability" for the measured overhead) and disables donation.
 
-Elasticity: restore() accepts any mesh — a run checkpointed on N hosts
-resumes on M (resharding happens on load, data skips to the saved step).
+Elasticity: checkpoints are world-agnostic (full logical arrays + the
+``elastic`` metadata block — see docs/CHECKPOINT_FORMAT.md for the on-disk
+contract and the W-resharding semantics).  ``fit_elastic`` is the elastic
+outer loop: it restores a checkpoint written at any world size, reshards
+it through ``repro.schedule.reshard`` (re-derives ownership for the new W,
+drains in-flight pipeline buffers), rebuilds the data mesh, re-jits and
+continues — and tolerates live worker-count changes *between* steps the
+same way, emitting a typed ``reshard`` event per resize.
 """
 from __future__ import annotations
 
@@ -36,10 +42,12 @@ from repro.core import kv as kvlib
 from repro.core.transform import GradientTransformation
 from repro.obs import events as obs_events
 from repro.obs import spans as obs_spans
+from repro.schedule import reshard as reshard_mod
 from repro.schedule import runtime as schedrt
 from repro.train import checkpoint as ckpt
-from repro.train.step import (init_opt_state, make_phased_step,
-                              make_train_step, stats_plan_of)
+from repro.train.step import (init_opt_state, make_dp_step,
+                              make_phased_step, make_train_step,
+                              stats_plan_of)
 
 
 @dataclasses.dataclass
@@ -312,6 +320,201 @@ class Trainer:
                     ckpt.save(self.ckpt_dir, step + 1,
                               {'params': params, 'opt_state': opt_state},
                               {'next_step': step + 1, 'preempted': True})
+                    break
+        finally:
+            self._ckptr.wait()
+            self._watchdog.recorder = None
+            recorder.close()
+        return params, opt_state, history
+
+    # -- elastic outer loop ---------------------------------------------------
+
+    def fit_elastic(self, params, data: Any, world: Optional[int] = None,
+                    world_fn: Optional[Callable[[int], Optional[int]]] = None,
+                    start_step: int = 0, resume: bool = True):
+        """Elastic training: tolerate worker-count changes *between* steps.
+
+        The run executes as a sequence of constant-W data-parallel phases
+        over a ``('data',)`` mesh of the first W local devices
+        (``launch.mesh.make_data_mesh``), stepping through the explicit-DP
+        ``make_dp_step``.  W starts at ``world`` (default: every local
+        device) and may change two ways:
+
+        * **restore** — a checkpoint written at a different W (its
+          ``elastic`` metadata block says which, docs/CHECKPOINT_FORMAT.md)
+          is restored leaf-for-leaf, then resharded;
+        * **live** — ``world_fn(step)`` (None = keep current) requests a
+          new W between steps, modeling workers being killed or re-added.
+
+        Either way the loop runs restore → reshard
+        (``schedule.reshard.reshard_state``: ownership re-derives from the
+        new (plan, W) at trace time, in-flight pipeline buffers drain to
+        the documented cold start) → rebuild mesh → re-jit → continue, and
+        emits a typed ``reshard`` event plus a fresh ``refresh_ownership``
+        map through ``repro.obs``.  Checkpoints written by this loop carry
+        the elastic metadata block, and the preemption contract (SIGTERM →
+        synchronous checkpoint → clean exit) is inherited from :meth:`fit`.
+
+        At W=1 the trajectory is bit-identical to :meth:`fit` (size-1
+        collectives are exact); across W the global batch mean is the same
+        up to float reduction order.  ``profile`` mode is not supported
+        here (phased spans assume the single-device step).
+
+        Returns ``(params, opt_state, history)`` with ``history`` a list of
+        ``(step, loss)`` pairs (steps matter: a resumed run starts mid-way).
+        """
+        from repro.launch.mesh import make_data_mesh
+
+        cfg = self.cfg
+        if cfg.profile:
+            raise ValueError('profile mode is not supported by fit_elastic '
+                             '(use fit for span-fenced phase profiling)')
+        self._install_signal_handlers()
+        world = int(world) if world else jax.device_count()
+
+        # the bucket plan is the reshard key: ownership maps and the
+        # checkpoint fingerprint both derive from it (None = first-order)
+        try:
+            plan = stats_plan_of(self.model, self.capture, params,
+                                 data.batch_at(start_step),
+                                 taps_fn=self.taps_fn)
+        except Exception:
+            plan = None
+
+        def _init_state(step):
+            return init_opt_state(self.model, self.opt, self.capture, params,
+                                  data.batch_at(step), taps_fn=self.taps_fn,
+                                  sched=self.sched, comm=self.comm,
+                                  factor=self.factor)
+
+        opt_state = None
+        world_from = world
+        source = 'init'
+        if resume and cfg.ckpt_every:
+            latest = ckpt.latest_step(self.ckpt_dir)
+            if latest is not None:
+                template = {'params': params, 'opt_state': _init_state(0)}
+                state, meta = ckpt.restore(self.ckpt_dir, latest, template)
+                params, opt_state = state['params'], state['opt_state']
+                start_step = meta.get('next_step', latest)
+                ck_world = reshard_mod.check_metadata(
+                    meta.get(reshard_mod.ELASTIC_KEY),
+                    plan=plan, pipeline=self.sched.pipeline)
+                world_from = ck_world if ck_world else world
+                source = 'checkpoint'
+                print(f'[trainer] resumed from step {latest} '
+                      f'(checkpoint W={world_from})', flush=True)
+        if opt_state is None:
+            opt_state = _init_state(start_step)
+
+        if cfg.donate:
+            # same caller-owned-buffer guard as fit: the jitted step
+            # donates its inputs
+            params = jax.tree_util.tree_map(
+                lambda x: x + 0 if hasattr(x, 'dtype') else x, params)
+            opt_state = jax.tree_util.tree_map(
+                lambda x: x + 0 if hasattr(x, 'dtype') else x, opt_state)
+
+        base_sched = schedrt.schedule_metrics(opt_state)
+        ref_base = int(base_sched['refreshes']) if base_sched else 0
+
+        recorder = obs_events.Recorder(self.metrics_path)
+        self._watchdog.recorder = recorder
+        step_fns: dict[int, Callable] = {}  # W -> compiled step (re-expand
+                                            # to a previous W reuses it)
+        step_fn = None
+
+        check_batch_next = True  # re-validated at start and on every resize
+
+        def _resize(w_from, w_to, at_step, src):
+            nonlocal params, opt_state, step_fn, world, check_batch_next
+            check_batch_next = True
+            opt_state, body = reshard_mod.reshard_state(
+                opt_state, world_from=w_from, world_to=w_to, plan=plan,
+                step=at_step, source=src)
+            mesh = make_data_mesh(w_to)
+            replicated = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            # explicit placement: a live shrink/grow leaves the old arrays
+            # committed to the previous mesh's devices
+            params = jax.device_put(params, replicated)
+            opt_state = jax.device_put(opt_state, replicated)
+            if w_to not in step_fns:
+                dp = make_dp_step(self.model, self.opt, self.capture, mesh,
+                                  taps_fn=self.taps_fn, sched=self.sched,
+                                  comm=self.comm, factor=self.factor)
+                step_fns[w_to] = jax.jit(
+                    dp, donate_argnums=(0, 1) if cfg.donate else ())
+            step_fn = step_fns[w_to]
+            world = w_to
+            if w_from != w_to:
+                recorder.emit('reshard', **body)
+                print(f"[trainer] reshard W={w_from} -> W={w_to} at step "
+                      f"{at_step} (pipeline buffers: {body['pipeline']}, "
+                      f"owners moved: {body.get('slices_moved', 0)}/"
+                      f"{body.get('slices_total', 0)})", flush=True)
+            own = schedrt.ownership_event(plan, world=w_to)
+            if own is not None:
+                recorder.emit('refresh_ownership', **own)
+
+        _resize(world_from, world, start_step, source)
+
+        def _meta(next_step, **extra):
+            return {'next_step': next_step,
+                    reshard_mod.ELASTIC_KEY: reshard_mod.elastic_metadata(
+                        world, plan=plan, pipeline=self.sched.pipeline),
+                    **extra}
+
+        history: list[tuple[int, float]] = []
+        prev_ref = ref_base
+        first_step = True
+        try:
+            for step in range(start_step, cfg.total_steps):
+                if world_fn is not None:
+                    want = world_fn(step)
+                    if want and int(want) != world:
+                        _resize(world, int(want), step, 'live')
+                batch = data.batch_at(step)
+                if check_batch_next:
+                    reshard_mod.check_batch_divisible(batch, world)
+                    check_batch_next = False
+                t0 = time.perf_counter()
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                loss = float(metrics['loss'])  # sync point
+                dt = time.perf_counter() - t0
+                if first_step:
+                    fresh = recorder.comm_sites()
+                    if fresh:
+                        self._run_sites = fresh
+                    self._log_comm(recorder, getattr(self, '_run_sites', {}))
+                    first_step = False
+                self._watchdog.observe(step, dt)
+                history.append((step, loss))
+                sched_fields = obs_events.step_fields(metrics)
+                if 'refreshes' in sched_fields:
+                    cur_ref = sched_fields['refreshes']
+                    if cur_ref > prev_ref:
+                        recorder.emit('refresh', step=step, refreshes=cur_ref,
+                                      step_time_s=round(dt, 6))
+                    prev_ref = cur_ref
+                if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+                    recorder.emit('step', step=step, loss=loss,
+                                  grad_norm=float(metrics['grad_norm']),
+                                  step_time_s=round(dt, 4), **sched_fields)
+                    print(f'[trainer] step {step:6d} loss {loss:.4f} '
+                          f'({dt*1e3:.0f} ms) W={world}', flush=True)
+                if cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
+                    self._ckptr.save(step + 1,
+                                     {'params': params,
+                                      'opt_state': opt_state},
+                                     _meta(step + 1))
+                if self._preempted:
+                    print('[trainer] preemption: synchronous checkpoint at '
+                          f'step {step + 1}', flush=True)
+                    self._ckptr.wait()
+                    ckpt.save(self.ckpt_dir, step + 1,
+                              {'params': params, 'opt_state': opt_state},
+                              _meta(step + 1, preempted=True))
                     break
         finally:
             self._ckptr.wait()

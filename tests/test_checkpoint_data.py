@@ -58,6 +58,60 @@ def test_elastic_reshard_restore(tmp_path):
     assert restored['a']['w'].sharding.is_equivalent_to(sh, 2)
 
 
+def test_restore_missing_leaf_raises(tmp_path):
+    """A template leaf absent from the manifest is a structural mismatch
+    (different optimizer / pipeline mode), not silently zero-filled."""
+    ckpt.save(tmp_path, 1, {'a': jnp.zeros(3)})
+    with pytest.raises(KeyError, match='missing leaf'):
+        ckpt.restore(tmp_path, 1, {'a': jnp.zeros(3), 'b': jnp.zeros(2)})
+
+
+def test_restore_shape_mismatch_names_the_leaf(tmp_path):
+    ckpt.save(tmp_path, 1, {'a': {'w': jnp.zeros((3, 4))}})
+    with pytest.raises(ValueError, match=r"\['a'\]\['w'\]"):
+        ckpt.restore(tmp_path, 1, {'a': {'w': jnp.zeros((4, 3))}})
+
+
+def test_restore_missing_step_raises(tmp_path):
+    ckpt.save(tmp_path, 1, {'a': jnp.zeros(3)})
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path, 99, {'a': jnp.zeros(3)})
+
+
+def test_gc_keep_zero_disables_gc(tmp_path):
+    """keep <= 0 means 'never delete' — NOT 'delete everything' (the
+    steps[:-0] == [] footgun is guarded explicitly)."""
+    for s in (1, 2, 3):
+        ckpt.save(tmp_path, s, {'a': jnp.zeros(2)})
+    ckpt.gc_old(tmp_path, keep=0)
+    assert ckpt.available_steps(tmp_path) == [1, 2, 3]
+    ckpt.gc_old(tmp_path, keep=-1)
+    assert ckpt.available_steps(tmp_path) == [1, 2, 3]
+
+
+def test_gc_keep_larger_than_available(tmp_path):
+    for s in (1, 2):
+        ckpt.save(tmp_path, s, {'a': jnp.zeros(2)})
+    ckpt.gc_old(tmp_path, keep=5)
+    assert ckpt.available_steps(tmp_path) == [1, 2]
+
+
+def test_gc_missing_dir_is_noop(tmp_path):
+    ckpt.gc_old(tmp_path / 'never_created', keep=2)  # must not raise
+    assert ckpt.available_steps(tmp_path / 'never_created') == []
+
+
+def test_gc_skips_incomplete_dirs(tmp_path):
+    """GC counts only committed checkpoints; a crashed save's tmp/partial
+    dir neither counts toward keep-K nor gets deleted by gc_old."""
+    for s in (1, 2, 3):
+        ckpt.save(tmp_path, s, {'a': jnp.zeros(2)})
+    (tmp_path / 'step_00000009').mkdir()  # no .complete marker
+    ckpt.gc_old(tmp_path, keep=1)
+    assert ckpt.available_steps(tmp_path) == [3]
+    assert (tmp_path / 'step_00000009').exists()
+
+
 def test_lm_stream_seekable_deterministic():
     s = LMStream(vocab=64, seq_len=16, batch=4, seed=3)
     b1 = s.batch_at(7)

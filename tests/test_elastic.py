@@ -1,0 +1,382 @@
+"""Elastic training: checkpoint resharding across world sizes + the
+preemption chaos tests.
+
+Three layers:
+
+* unit tests for ``schedule/reshard.py`` (metadata contract, ownership
+  delta, pipeline drain rule) and ``launch.mesh.make_data_mesh`` — single
+  device, fast;
+* a single-device anchor: ``fit_elastic`` at W=1 resumes bit-exactly and
+  matches ``fit`` bit-exactly (size-1 collectives are exact);
+* ``@pytest.mark.multihost`` subprocess chaos tests (forced 4 host
+  devices): a W=4 run SIGTERM-killed mid-run, resumed at W=2, killed
+  again, re-expanded to W=4 — the stitched loss trajectory must match the
+  uninterrupted W=4 run within ``TRAJ_TOL`` for eva AND kfac, with every
+  telemetry record (including the ``reshard`` events) schema-valid.
+
+Tolerance: across a resize only the float reduction order of the batch
+mean / stats psum changes (pmean of W shard-means = global mean exactly in
+real arithmetic).  Measured drift on the seed run: eva 0.0 (bit-exact),
+kfac ≤ 6e-8; ``TRAJ_TOL = 5e-6`` documents the contract with margin
+(docs/CHECKPOINT_FORMAT.md).  The ``pipeline='onestep'`` drain rule is
+*semantic*, not numerical — one cold pipeline step after a resize — so it
+is asserted structurally, not by trajectory equality.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bucketing
+from repro.core.registry import make_optimizer
+from repro.data.synthetic import ClassStream
+from repro.launch.mesh import make_data_mesh
+from repro.models import module as M
+from repro.models.simple import MLP, classifier_loss_fn
+from repro.obs import events as obs_events
+from repro.schedule import pipeline as pipemod
+from repro.schedule import reshard
+from repro.train.step import taps_caller
+from repro.train.trainer import Trainer, TrainerConfig
+
+# documented cross-resize trajectory tolerance (sync pipeline, f32 wire)
+TRAJ_TOL = 5e-6
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# reshard.py units
+
+
+def _plan():
+    leaves = {'blk0/w': jnp.zeros((8, 4)), 'blk1/w': jnp.zeros((8, 4)),
+              'head/w': jnp.zeros((8, 3)), 'stack/w': jnp.zeros((2, 6, 4))}
+    return bucketing.build_plan(leaves)
+
+
+def test_plan_fingerprint_stable_and_distinct():
+    p = _plan()
+    assert reshard.plan_fingerprint(p) == reshard.plan_fingerprint(_plan())
+    other = bucketing.build_plan({'blk0/w': jnp.zeros((8, 5))})
+    assert reshard.plan_fingerprint(p) != reshard.plan_fingerprint(other)
+    assert reshard.plan_fingerprint(None) == ''
+
+
+def test_metadata_roundtrip_and_mismatches():
+    p = _plan()
+    meta = reshard.elastic_metadata(4, plan=p, pipeline='onestep')
+    assert meta == {'world': 4, 'pipeline': 'onestep',
+                    'plan': reshard.plan_fingerprint(p)}
+    assert reshard.check_metadata(meta, plan=p, pipeline='onestep') == 4
+    # pre-elastic checkpoint (no block): accepted, world unknown
+    assert reshard.check_metadata(None, plan=p) == 0
+    assert reshard.check_metadata({}, plan=p) == 0
+    with pytest.raises(reshard.ReshardError, match='bucket plan'):
+        reshard.check_metadata(meta, plan=None, pipeline='onestep')
+    with pytest.raises(reshard.ReshardError, match='pipeline mode'):
+        reshard.check_metadata(meta, plan=p, pipeline='sync')
+
+
+def test_ownership_delta():
+    p = _plan()
+    same = reshard.ownership_delta(p, 4, 4)
+    # total = sum of rows x lead over buckets: 2*1 + 1*1 + 1*2 = 5 slices
+    assert same['slices_total'] == 5 and same['slices_moved'] == 0
+    d = reshard.ownership_delta(p, 1, 4)
+    assert d['slices_total'] == 5
+    assert 0 < d['slices_moved'] <= 5  # W=1 owns all at rank 0; W=4 spreads
+    assert reshard.ownership_delta(None, 4, 2) == {}
+
+
+def _pipe_state():
+    buf = {'s': jnp.full((3,), 7.0), 't': jnp.full((2, 2), -1.0)}
+    return {'ema': jnp.ones((4,)),
+            'pipe': {'stats': pipemod.PipelineState(
+                         inflight=buf, age=jnp.asarray(3, jnp.int32)),
+                     'refresh': pipemod.PipelineState(
+                         inflight=None, age=jnp.asarray(2, jnp.int32))}}
+
+
+def test_reshard_state_drain_keep_and_passthrough():
+    st = _pipe_state()
+    # resize + drain: buffers zeroed, ages reset — the documented cold start
+    out, body = reshard.reshard_state(st, world_from=4, world_to=2)
+    assert body['pipeline'] == 'drained'
+    assert float(out['pipe']['stats'].age) == 0
+    assert float(out['pipe']['refresh'].age) == 0
+    assert out['pipe']['refresh'].inflight is None
+    np.testing.assert_array_equal(out['pipe']['stats'].inflight['s'],
+                                  np.zeros(3))
+    np.testing.assert_array_equal(out['ema'], st['ema'])  # untouched
+    # resize + keep: values pass through
+    out, body = reshard.reshard_state(st, world_from=4, world_to=2,
+                                      pipeline_rule='keep')
+    assert body['pipeline'] == 'kept'
+    np.testing.assert_array_equal(out['pipe']['stats'].inflight['s'],
+                                  np.full(3, 7.0))
+    # no resize: bit-exact passthrough (the non-elastic resume contract)
+    out, body = reshard.reshard_state(st, world_from=4, world_to=4)
+    assert body['pipeline'] == 'kept'
+    assert float(out['pipe']['stats'].age) == 3
+    # no pipeline in the state at all
+    out, body = reshard.reshard_state({'ema': jnp.ones(2)},
+                                      world_from=4, world_to=2)
+    assert body['pipeline'] == 'none'
+    with pytest.raises(ValueError, match='pipeline_rule'):
+        reshard.reshard_state(st, world_from=4, world_to=2,
+                              pipeline_rule='zero')
+
+
+def test_reshard_event_body_is_schema_valid():
+    st = _pipe_state()
+    _, body = reshard.reshard_state(st, world_from=4, world_to=2,
+                                    plan=_plan(), step=17, source='live')
+    rec = obs_events.Recorder(None).emit('reshard', **body)  # fail-fast
+    assert rec['world_from'] == 4 and rec['world_to'] == 2
+    assert rec['step'] == 17 and rec['slices_total'] == 5
+    assert obs_events.validate_record(rec) == []
+
+
+def test_make_data_mesh_bounds():
+    mesh = make_data_mesh(1)
+    assert mesh.axis_names == ('data',) and mesh.devices.size == 1
+    n = jax.device_count()
+    assert make_data_mesh().devices.size == n
+    with pytest.raises(ValueError, match='world'):
+        make_data_mesh(n + 1)
+    with pytest.raises(ValueError, match='world'):
+        make_data_mesh(0)
+
+
+def test_taps_caller_arities():
+    one = taps_caller(lambda p: ('one', p))
+    two = taps_caller(lambda p, b: ('two', p, b))
+    none = taps_caller(None)
+    assert one('P', 'B') == ('one', 'P')
+    assert two('P', 'B') == ('two', 'P', 'B')
+    assert none('P', 'B') is None
+
+
+# ---------------------------------------------------------------------------
+# Single-device anchor: W=1 elastic == fit, and elastic resume is bit-exact
+
+
+def _build(name, out_dir, steps, ckpt_every=0):
+    model = MLP([8, 16, 3])
+    model.loss_fn = classifier_loss_fn(model)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    opt, capture = make_optimizer(name, lr=0.05)
+    taps_fn = ((lambda p, b: model.make_taps(b['x'].shape[0], capture))
+               if capture.needs_taps else None)
+    cfg = TrainerConfig(total_steps=steps, log_every=4,
+                        ckpt_every=ckpt_every, out_dir=str(out_dir))
+    return Trainer(model, opt, capture, cfg, taps_fn=taps_fn), params
+
+
+def test_fit_elastic_w1_matches_fit_bit_exact(tmp_path):
+    data = ClassStream(batch=32, dim=8, classes=3, seed=0)
+    tr, params = _build('eva', tmp_path / 'fit', steps=8)
+    _, _, h_fit = tr.fit(params, data)
+    tr2, params2 = _build('eva', tmp_path / 'el', steps=8)
+    _, _, h_el = tr2.fit_elastic(params2, data, world=1)
+    assert [l for _, l in h_el] == h_fit  # atol=0
+
+
+def test_fit_elastic_resume_same_world_bit_exact(tmp_path):
+    data = ClassStream(batch=32, dim=8, classes=3, seed=0)
+    tr, params = _build('eva', tmp_path / 'full', steps=10)
+    _, _, h_full = tr.fit_elastic(params, data, world=1)
+    # interrupted: 6 steps, checkpoint, then a fresh trainer resumes to 10
+    tr1, params1 = _build('eva', tmp_path / 'resumed', steps=6, ckpt_every=6)
+    _, _, h_a = tr1.fit_elastic(params1, data, world=1)
+    tr2, params2 = _build('eva', tmp_path / 'resumed', steps=10, ckpt_every=6)
+    _, _, h_b = tr2.fit_elastic(params2, data, world=1)
+    assert [s for s, _ in h_b] == list(range(6, 10))
+    assert h_a + h_b == h_full  # atol=0: restore→reshard(W unchanged)→go
+
+
+def test_batch_divisibility_check():
+    batch = ClassStream(batch=30, dim=8, classes=3, seed=0).batch_at(0)
+    reshard.check_batch_divisible(batch, 2)  # 30 % 2 == 0
+    with pytest.raises(reshard.ReshardError, match='batch % W'):
+        reshard.check_batch_divisible(batch, 4)  # 30 % 4 != 0
+
+
+# ---------------------------------------------------------------------------
+# Chaos tests (subprocess; forced 4 host devices)
+
+# One trainer run in a scrubbed subprocess.  argv:
+#   world steps kill_at out_dir opt pipeline
+# kill_at >= 0: SIGTERM ourselves when the trainer requests that step's
+# batch — the real preemption path (signal → synchronous checkpoint →
+# clean exit), made deterministic.  Prints {'hist': [[step, loss], ...]}.
+_RUN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+    import json, signal, sys
+    import jax
+    from repro.core.registry import make_optimizer
+    from repro.data.synthetic import ClassStream
+    from repro.models import module as M
+    from repro.models.simple import MLP, classifier_loss_fn
+    from repro.schedule.runtime import RefreshRuntime
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    world, steps, kill_at = (int(a) for a in sys.argv[1:4])
+    out_dir, opt_name, pipeline = sys.argv[4:7]
+
+    class ChaosStream:
+        # preemption chaos: deliver SIGTERM when the trainer asks for the
+        # kill step's batch; that step still runs, then the trainer's own
+        # handler checkpoints synchronously and exits the loop
+        def __init__(self, inner, kill_at):
+            self.inner, self.kill_at = inner, kill_at
+        def batch_at(self, step):
+            if step == self.kill_at:
+                os.kill(os.getpid(), signal.SIGTERM)
+            return self.inner.batch_at(step)
+
+    model = MLP([8, 16, 3])
+    model.loss_fn = classifier_loss_fn(model)
+    params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    opt, capture = make_optimizer(opt_name, lr=0.05)
+    taps_fn = ((lambda p, b: model.make_taps(b['x'].shape[0], capture))
+               if capture.needs_taps else None)
+    cfg = TrainerConfig(total_steps=steps, log_every=1, ckpt_every=10 ** 6,
+                        out_dir=out_dir)
+    tr = Trainer(model, opt, capture, cfg, taps_fn=taps_fn,
+                 sched=RefreshRuntime(pipeline=pipeline))
+    data = ChaosStream(ClassStream(batch=32, dim=8, classes=3, seed=0),
+                       kill_at if kill_at >= 0 else None)
+    _, _, hist = tr.fit_elastic(params, data, world=world)
+    print(json.dumps({'devices': jax.device_count(),
+                      'hist': [[s, float(l)] for s, l in hist]}))
+""")
+
+# Live resize inside ONE process: W=4 constant vs world_fn 4 -> 2 -> 4
+# (restore-free re-jit path).  argv: opt pipeline out_dir
+_RESIZE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+    import json, sys
+    import jax
+    from repro.core.registry import make_optimizer
+    from repro.data.synthetic import ClassStream
+    from repro.models import module as M
+    from repro.models.simple import MLP, classifier_loss_fn
+    from repro.schedule.runtime import RefreshRuntime
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    opt_name, pipeline, out_dir = sys.argv[1:4]
+
+    def run(tag, world_fn):
+        model = MLP([8, 16, 3])
+        model.loss_fn = classifier_loss_fn(model)
+        params = M.init_params(model.param_specs(), jax.random.PRNGKey(0))
+        opt, capture = make_optimizer(opt_name, lr=0.05)
+        taps_fn = ((lambda p, b: model.make_taps(b['x'].shape[0], capture))
+                   if capture.needs_taps else None)
+        cfg = TrainerConfig(total_steps=16, log_every=4,
+                            out_dir=f'{out_dir}/{tag}')
+        tr = Trainer(model, opt, capture, cfg, taps_fn=taps_fn,
+                     sched=RefreshRuntime(pipeline=pipeline))
+        data = ClassStream(batch=32, dim=8, classes=3, seed=0)
+        _, _, hist = tr.fit_elastic(params, data, world=4,
+                                    world_fn=world_fn)
+        return [l for _, l in hist]
+
+    base = run('base', None)
+    resized = run('resized', lambda s: 2 if 6 <= s < 11 else 4)
+    print(json.dumps({'devices': jax.device_count(),
+                      'maxdiff': max(abs(a - b)
+                                     for a, b in zip(base, resized))}))
+""")
+
+
+def _run_sub(script, *args):
+    out = subprocess.run(
+        [sys.executable, '-c', script, *map(str, args)],
+        capture_output=True, text=True, timeout=600,
+        # JAX_PLATFORMS pinned: the scrubbed env must not fall through to
+        # accelerator discovery (libtpu-on-a-TPU-less-host hangs forever)
+        env={'PYTHONPATH': 'src', 'PATH': '/usr/bin:/bin', 'HOME': '/root',
+             'JAX_PLATFORMS': 'cpu'},
+        cwd=REPO)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _records(out_dir: Path) -> list[dict]:
+    lines = (out_dir / 'metrics.jsonl').read_text().splitlines()
+    return [json.loads(l) for l in lines if l.strip()]
+
+
+@pytest.mark.multihost
+@pytest.mark.parametrize('opt_name', ['eva', 'kfac'])
+def test_chaos_kill_reshard_matches_uninterrupted(opt_name, tmp_path):
+    """W=4 → SIGTERM at step 8 → resume at W=2 → SIGTERM at step 16 →
+    re-expand to W=4: the stitched trajectory matches the uninterrupted
+    W=4 run within TRAJ_TOL, and every record (incl. the two `reshard`
+    events) is schema-valid."""
+    steps = 24
+    base = _run_sub(_RUN_SCRIPT, 4, steps, -1, tmp_path / 'base',
+                    opt_name, 'sync')
+    assert base['devices'] == 4
+    chaos_dir = tmp_path / 'chaos'
+    h1 = _run_sub(_RUN_SCRIPT, 4, steps, 8, chaos_dir, opt_name, 'sync')
+    h2 = _run_sub(_RUN_SCRIPT, 2, steps, 16, chaos_dir, opt_name, 'sync')
+    h3 = _run_sub(_RUN_SCRIPT, 4, steps, -1, chaos_dir, opt_name, 'sync')
+    stitched = h1['hist'] + h2['hist'] + h3['hist']
+    assert [s for s, _ in stitched] == list(range(steps))  # no gap, no rerun
+    diffs = [abs(a - b) for (_, a), (_, b) in zip(base['hist'], stitched)]
+    assert max(diffs) < TRAJ_TOL, f'trajectory drift {max(diffs)}'
+
+    # telemetry across the resizes: schema-valid, resize pairs recorded
+    recs = _records(chaos_dir)
+    for rec in recs:
+        assert obs_events.validate_record(rec) == [], rec
+    resizes = [(r['world_from'], r['world_to'], r['source'])
+               for r in recs if r.get('event') == 'reshard']
+    assert resizes == [(4, 2, 'checkpoint'), (2, 4, 'checkpoint')]
+    owns = [r['world'] for r in recs if r.get('event') == 'refresh_ownership']
+    if owns:  # eva-family preconditions too → ownership re-emitted per phase
+        assert owns == [4, 2, 4]
+
+    # CI artifacts: the two trajectories, uploaded by the elastic workflow
+    # cell (gitignored locally)
+    for tag, hist in (('base', base['hist']), ('chaos', stitched)):
+        (REPO / f'ELASTIC_{opt_name}_{tag}.json').write_text(json.dumps(
+            {'opt': opt_name, 'tol': TRAJ_TOL, 'hist': hist}))
+
+
+@pytest.mark.multihost
+@pytest.mark.parametrize('opt_name', ['eva', 'kfac'])
+def test_live_resize_matches_uninterrupted(opt_name, tmp_path):
+    """world_fn resize 4 → 2 → 4 between steps (no restart, re-jit only)
+    stays within TRAJ_TOL of the constant-W=4 run."""
+    rec = _run_sub(_RESIZE_SCRIPT, opt_name, 'sync', tmp_path)
+    assert rec['devices'] == 4
+    assert rec['maxdiff'] < TRAJ_TOL, rec
+    resizes = [(r['world_from'], r['world_to'])
+               for r in _records(tmp_path / 'resized')
+               if r.get('event') == 'reshard']
+    assert resizes == [(4, 2), (2, 4)]
+
+
+@pytest.mark.multihost
+def test_live_resize_onestep_drains_pipeline(tmp_path):
+    """Under pipeline='onestep' a resize drains the in-flight buffers: the
+    reshard events must say so, and the trajectory stays close (one cold
+    pipeline step is a semantic, documented divergence — loose bound)."""
+    rec = _run_sub(_RESIZE_SCRIPT, 'kfac', 'onestep', tmp_path)
+    assert rec['maxdiff'] < 0.1  # drain != bit-exact, but same basin
+    drains = [r['pipeline'] for r in _records(tmp_path / 'resized')
+              if r.get('event') == 'reshard']
+    assert drains == ['drained', 'drained']

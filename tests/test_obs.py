@@ -36,6 +36,9 @@ VALID = {
              'exchanged_mb_cum': 4.5},
     'refresh': {'step': 4, 'refreshes': 2, 'step_time_s': 0.02},
     'refresh_ownership': {'world': 4, 'owners': {'float32_4x8x8': [1, 1, 1, 1]}},
+    'reshard': {'world_from': 4, 'world_to': 2, 'pipeline': 'drained',
+                'source': 'checkpoint', 'step': 7, 'slices_total': 5,
+                'slices_moved': 3},
     'comm_exchange': {'sites': {'stats/eva': {
         'traces': 1, 'bytes_per_call': 1024, 'codec': 'f32',
         'mode': 'psum'}}},
