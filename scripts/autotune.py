@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Kernel tile/impl autotuner CLI — thin wrapper over
+``repro.kernels.autotune``.
+
+    PYTHONPATH=src python scripts/autotune.py --shapes 512x384,1000x513 \\
+        --out runs/tile_cache.json
+    PYTHONPATH=src python scripts/autotune.py --shapes 64x48 \\
+        --ops bilinear,matvec --update-defaults
+
+Benchmarks each (op, shape, dtype) across the pure-XLA path and a small
+Pallas block grid, writes the deterministic winner cache (the format
+``dispatch.install_cache`` / ``--kernel-impl auto`` consume), and with
+``--update-defaults`` merges it into the shipped
+``src/repro/kernels/tile_defaults.json`` warm-start file.
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def parse_shapes(text):
+    shapes = []
+    for tok in text.split(','):
+        d_in, d_out = tok.lower().split('x')
+        shapes.append((int(d_in), int(d_out)))
+    return shapes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split('\n')[0])
+    ap.add_argument('--shapes', required=True,
+                    help='comma list of d_inxd_out, e.g. 512x384,1000x513')
+    ap.add_argument('--ops', default=None,
+                    help='comma list from bilinear,matvec,rank1_update,'
+                         'eva_fused,eva_f_fused (default: the three '
+                         'primitives)')
+    ap.add_argument('--dtypes', default='float32',
+                    help='comma list of dtypes (default float32)')
+    ap.add_argument('--reps', type=int, default=3)
+    ap.add_argument('--out', default=None,
+                    help='write the cache JSON here')
+    ap.add_argument('--update-defaults', action='store_true',
+                    help='merge winners into the shipped tile_defaults.json')
+    args = ap.parse_args(argv)
+
+    from repro.kernels import autotune, dispatch
+
+    cache = autotune.tune(
+        parse_shapes(args.shapes),
+        ops=tuple(args.ops.split(',')) if args.ops else autotune.OPS,
+        dtypes=tuple(args.dtypes.split(',')),
+        bench=lambda fn: autotune.default_bench(fn, reps=args.reps))
+    sys.stdout.write(autotune.dumps(cache))
+    if args.out:
+        autotune.write(cache, args.out)
+        print(f'wrote {args.out}', file=sys.stderr)
+    if args.update_defaults:
+        path = dispatch._DEFAULTS_FILE
+        base = json.loads(path.read_text()) if path.exists() else {}
+        autotune.write(autotune.merge(base, cache), path)
+        print(f'updated {path}', file=sys.stderr)
+    return 0
+
+
+if __name__ == '__main__':
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / 'src'))
+    sys.exit(main())

@@ -22,10 +22,11 @@ import jax.numpy as jnp
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
-from repro.core.clipping import kl_clip_trace
+from repro.core.clipping import finish_kl_clip, kl_clip_trace
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
-                                  scale_by_schedule)
+                                  scale_by_schedule, tree_vdot)
+from repro.kernels import dispatch
 from repro.schedule import (pipeline as pipemod, policy as schedpol,
                             runtime as schedrt)
 
@@ -38,6 +39,10 @@ class EvaState(NamedTuple):
     # tree exchanged this step, applied (fed to the EMA) next step.  None
     # in sync mode (no extra leaves, same checkpoints as before).
     pipe: Any = None
+    # fused path only (``eva(fused=True)``): the f32 heavy-ball buffer that
+    # the composed chain keeps in kl_clip_trace's TraceState.  None for the
+    # composed path — state layout/checkpoints there are unchanged.
+    trace: Any = None
 
 
 def _zeros_like_spec(tree):
@@ -91,9 +96,52 @@ def _refresh_snapshot(pol, sched, stats, cached):
     return used, new_sched, (None if pol.wants_snapshot else used)
 
 
+def _kv_init(params, extras, fields, policy, interval):
+    """Shared eva-family init: bucket plan + zeroed running stats + sched."""
+    if extras is None or extras.stats is None:
+        raise ValueError('eva-family preconditioner init needs example stats '
+                         '(pass Extras(stats=...) — see train.make_train_step)')
+    flat = kvlib.flatten_params(params)
+    plan = _stats_plan(flat, extras.stats, extras)
+    zeros = bucketing.gather_tree(
+        plan, _zeros_like_spec(_extract(extras.stats, fields)))
+    rt = schedrt.from_extras(extras)
+    pol = rt.resolve(policy, interval)
+    pipe = ({'stats': pipemod.init_state(zeros)}
+            if rt.pipeline == 'onestep' else None)
+    return dict(running=kvlib.init_running(zeros),
+                cached=_eva_cached_init(pol, zeros),
+                sched=schedpol.init_state(pol, zeros), pipe=pipe)
+
+
+def _kv_step(state, updates, extras, *, fields, site, policy, interval,
+             kv_decay):
+    """Shared eva-family per-step stats plumbing: EMA the fresh KVs (with
+    the staged cross-replica mean) and pick the applied snapshot.
+
+    Returns ``(flat updates, plan, applied stats, new-state field dict)``.
+    """
+    rt = schedrt.from_extras(extras)
+    pol = rt.resolve(policy, interval)
+    pipe = schedrt.resolve_pipe(rt, state.pipe)
+    flat = kvlib.flatten_params(updates)
+    fresh_flat = _extract(extras.stats, fields)
+    plan = _stats_plan(flat, fresh_flat, extras)
+    fresh, pipe_stats = pipemod.staged_pmean(
+        bucketing.gather_tree(plan, fresh_flat),
+        None if pipe is None else pipe['stats'], site=site)
+    stats, running = kvlib.update_running(state.running, fresh, kv_decay)
+    used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
+                                            state.cached)
+    return flat, plan, used, dict(
+        running=running, cached=cached, sched=sched,
+        pipe=None if pipe is None else {'stats': pipe_stats})
+
+
 def eva_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
                        use_pallas: bool = False, interval: int = 1,
-                       policy: Optional[schedpol.RefreshPolicy] = None
+                       policy: Optional[schedpol.RefreshPolicy] = None,
+                       impl: Optional[str] = None
                        ) -> GradientTransformation:
     """Bucketed P = (G − (b̄ᵀGā)/(γ+‖ā‖²‖b̄‖²)·āb̄ᵀ)/γ with EMA'd KVs.
 
@@ -105,40 +153,63 @@ def eva_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
     fields = ('a_mean', 'b_mean')
 
     def init(params, extras: Extras | None = None):
-        if extras is None or extras.stats is None:
-            raise ValueError('eva_preconditioner.init needs example stats '
-                             '(pass Extras(stats=...) — see train.make_train_step)')
-        flat = kvlib.flatten_params(params)
-        plan = _stats_plan(flat, extras.stats, extras)
-        zeros = bucketing.gather_tree(
-            plan, _zeros_like_spec(_extract(extras.stats, fields)))
-        rt = schedrt.from_extras(extras)
-        pol = rt.resolve(policy, interval)
-        pipe = ({'stats': pipemod.init_state(zeros)}
-                if rt.pipeline == 'onestep' else None)
-        return EvaState(running=kvlib.init_running(zeros),
-                        cached=_eva_cached_init(pol, zeros),
-                        sched=schedpol.init_state(pol, zeros), pipe=pipe)
+        return EvaState(**_kv_init(params, extras, fields, policy, interval))
 
     def update(updates, state: EvaState, params=None, extras: Extras | None = None):
         del params
-        rt = schedrt.from_extras(extras)
-        pol = rt.resolve(policy, interval)
-        pipe = schedrt.resolve_pipe(rt, state.pipe)
-        flat = kvlib.flatten_params(updates)
-        fresh_flat = _extract(extras.stats, fields)
-        plan = _stats_plan(flat, fresh_flat, extras)
-        fresh, pipe_stats = pipemod.staged_pmean(
-            bucketing.gather_tree(plan, fresh_flat),
-            None if pipe is None else pipe['stats'], site='stats/eva')
-        stats, running = kvlib.update_running(state.running, fresh, kv_decay)
-        used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
-                                                state.cached)
+        flat, plan, used, parts = _kv_step(
+            state, updates, extras, fields=fields, site='stats/eva',
+            policy=policy, interval=interval, kv_decay=kv_decay)
+        k_impl = dispatch.impl_from_extras(
+            extras, pre._kernel_impl(use_pallas, impl))
         out = pre.precondition_tree(flat, used, 'eva', gamma, plan=plan,
-                                    use_pallas=use_pallas)
-        return kvlib.unflatten_params(out), EvaState(
-            running=running, cached=cached, sched=sched,
-            pipe=None if pipe is None else {'stats': pipe_stats})
+                                    impl=k_impl)
+        return kvlib.unflatten_params(out), EvaState(**parts)
+
+    return GradientTransformation(init, update)
+
+
+def eva_fused_update(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
+                     kl_kappa: float = 1e-3, momentum: float = 0.9,
+                     fold_kl: bool = True, impl: Optional[str] = None,
+                     interval: int = 1,
+                     policy: Optional[schedpol.RefreshPolicy] = None
+                     ) -> GradientTransformation:
+    """Preconditioner + KL trust region + heavy-ball as ONE transform.
+
+    Each bucket runs a single ``eva_fused`` dispatch (``kernels/fused.py``)
+    that preconditions, folds ``m ← μ·m + P``, and emits the ⟨u,g⟩ partials
+    the Eq. 16 clip needs — the separate kl_clip_trace tree passes
+    disappear.  ``fold_kl=False`` (set when weight decay runs before the
+    preconditioner, making the kernel's g ≠ raw_grads) keeps the kernel
+    fusion but recomputes the global uᵀg against ``extras.raw_grads``.
+    Math matches ``eva_preconditioner + kl_clip_trace`` (non-nesterov) to
+    f32 reduction tolerance; the momentum buffer lives in
+    ``EvaState.trace`` instead of a chained TraceState.
+    """
+    fields = ('a_mean', 'b_mean')
+
+    def init(params, extras: Extras | None = None):
+        return EvaState(**_kv_init(params, extras, fields, policy, interval),
+                        trace=_zeros_like_spec(params))
+
+    def update(updates, state: EvaState, params=None, extras: Extras | None = None):
+        del params
+        flat, plan, used, parts = _kv_step(
+            state, updates, extras, fields=fields, site='stats/eva',
+            policy=policy, interval=interval, kv_decay=kv_decay)
+        k_impl = dispatch.impl_from_extras(extras, impl)
+        out_flat, partials = pre.precondition_tree_fused(
+            flat, used, 'eva', gamma, plan=plan,
+            trace=kvlib.flatten_params(state.trace), momentum=momentum,
+            fold_momentum=True, impl=k_impl)
+        u = kvlib.unflatten_params(out_flat)
+        if fold_kl:
+            kl = sum(partials[p][0] for p in sorted(partials))
+        else:
+            kl = tree_vdot(u, extras.raw_grads)
+        out, stored = finish_kl_clip(u, kl, extras.step, kl_kappa, lr)
+        return out, EvaState(**parts, trace=stored)
 
     return GradientTransformation(init, update)
 
@@ -147,15 +218,34 @@ def eva(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
         kl_kappa: float = 1e-3, momentum: float = 0.9,
         weight_decay: float = 0.0, nesterov: bool = False,
         use_pallas: bool = False, interval: int = 1,
-        policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
-    """The full Eva optimizer as evaluated in the paper (§5)."""
+        policy: Optional[schedpol.RefreshPolicy] = None,
+        fused: bool = False,
+        kernel_impl: Optional[str] = None) -> GradientTransformation:
+    """The full Eva optimizer as evaluated in the paper (§5).
+
+    ``fused=True`` collapses preconditioner + KL clip + momentum into one
+    kernel launch per bucket (``eva_fused_update``); it requires the
+    non-nesterov trust-region tail, so nesterov / ``kl_kappa=None`` configs
+    fall back to the composed chain.  ``kernel_impl`` is the dispatch
+    request for the kernel ops (overridable per step via
+    ``Extras.kernel``).
+    """
     parts = []
     if weight_decay:
         # L2 regularization enters the gradient *before* preconditioning,
         # matching the reference implementation (grad += wd * w pre-hook).
         parts.append(add_decayed_weights(weight_decay))
+    if fused and kl_kappa is not None and not nesterov:
+        parts.append(eva_fused_update(
+            lr, gamma, kv_decay, kl_kappa, momentum,
+            fold_kl=(weight_decay == 0.0),
+            impl=kernel_impl or pre._kernel_impl(use_pallas, None),
+            interval=interval, policy=policy))
+        parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
+        return chain(*parts)
     parts.append(eva_preconditioner(gamma, kv_decay, use_pallas=use_pallas,
-                                    interval=interval, policy=policy))
+                                    interval=interval, policy=policy,
+                                    impl=kernel_impl))
     if kl_kappa is not None:
         # momentum lives INSIDE the trust region (see clipping.kl_clip_trace)
         parts.append(kl_clip_trace(kl_kappa, lr, momentum, nesterov=nesterov))

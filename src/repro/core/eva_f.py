@@ -3,22 +3,26 @@ preconditioning + hyper-parameter-free KL normalization.
 
 Bucketed like ``eva``: one ``precondition_tree`` call per (shape, dtype)
 bucket, bucket-level KV EMA, distributed psum hook.  KV-snapshot refresh is
-scheduled through ``repro.schedule`` (same knob as the baselines)."""
+scheduled through ``repro.schedule`` (same knob as the baselines).
+
+``eva_f(fused=True)`` runs the preconditioner as one ``eva_f_fused``
+dispatch per bucket, folding the ⟨p,g⟩ inner product the KL normalizer
+needs into the kernel epilogue; the normalize + EMA tail itself stays a
+single jnp pass (its global scale depends on every bucket, so it cannot
+live inside a per-bucket launch — see ``kernels/fused.py``)."""
 from __future__ import annotations
 
 from typing import Any, NamedTuple, Optional
 
-from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
-from repro.core.clipping import kl_normalize
-from repro.core.eva import (_eva_cached_init, _extract, _refresh_snapshot,
-                            _stats_plan, _zeros_like_spec)
+from repro.core.clipping import finish_normalized_ema, kl_normalize
+from repro.core.eva import _kv_init, _kv_step, _zeros_like_spec
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
-                                  scale_by_schedule)
-from repro.schedule import (pipeline as pipemod, policy as schedpol,
-                            runtime as schedrt)
+                                  scale_by_schedule, tree_vdot)
+from repro.kernels import dispatch
+from repro.schedule import policy as schedpol
 
 
 class EvaFState(NamedTuple):
@@ -27,48 +31,75 @@ class EvaFState(NamedTuple):
     sched: schedpol.SchedState
     # pipeline='onestep': {'stats': PipelineState}; None in sync mode
     pipe: Any = None
+    # fused path only: the f32 EMA momentum buffer (else in ema_trace state)
+    trace: Any = None
+
+
+_FIELDS = ('a_mean',)
 
 
 def eva_f_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
                          use_pallas: bool = False, interval: int = 1,
-                         policy: Optional[schedpol.RefreshPolicy] = None
+                         policy: Optional[schedpol.RefreshPolicy] = None,
+                         impl: Optional[str] = None
                          ) -> GradientTransformation:
-    fields = ('a_mean',)
 
     def init(params, extras: Extras | None = None):
-        if extras is None or extras.stats is None:
-            raise ValueError('eva_f_preconditioner.init needs example stats')
-        flat = kvlib.flatten_params(params)
-        plan = _stats_plan(flat, extras.stats, extras)
-        zeros = bucketing.gather_tree(
-            plan, _zeros_like_spec(_extract(extras.stats, fields)))
-        rt = schedrt.from_extras(extras)
-        pol = rt.resolve(policy, interval)
-        pipe = ({'stats': pipemod.init_state(zeros)}
-                if rt.pipeline == 'onestep' else None)
-        return EvaFState(running=kvlib.init_running(zeros),
-                         cached=_eva_cached_init(pol, zeros),
-                         sched=schedpol.init_state(pol, zeros), pipe=pipe)
+        return EvaFState(**_kv_init(params, extras, _FIELDS, policy,
+                                    interval))
 
     def update(updates, state: EvaFState, params=None, extras: Extras | None = None):
         del params
-        rt = schedrt.from_extras(extras)
-        pol = rt.resolve(policy, interval)
-        pipe = schedrt.resolve_pipe(rt, state.pipe)
-        flat = kvlib.flatten_params(updates)
-        fresh_flat = _extract(extras.stats, fields)
-        plan = _stats_plan(flat, fresh_flat, extras)
-        fresh, pipe_stats = pipemod.staged_pmean(
-            bucketing.gather_tree(plan, fresh_flat),
-            None if pipe is None else pipe['stats'], site='stats/eva_f')
-        stats, running = kvlib.update_running(state.running, fresh, kv_decay)
-        used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
-                                                state.cached)
+        flat, plan, used, parts = _kv_step(
+            state, updates, extras, fields=_FIELDS, site='stats/eva_f',
+            policy=policy, interval=interval, kv_decay=kv_decay)
+        k_impl = dispatch.impl_from_extras(
+            extras, pre._kernel_impl(use_pallas, impl))
         out = pre.precondition_tree(flat, used, 'eva_f', gamma, plan=plan,
-                                    use_pallas=use_pallas)
-        return kvlib.unflatten_params(out), EvaFState(
-            running=running, cached=cached, sched=sched,
-            pipe=None if pipe is None else {'stats': pipe_stats})
+                                    impl=k_impl)
+        return kvlib.unflatten_params(out), EvaFState(**parts)
+
+    return GradientTransformation(init, update)
+
+
+def eva_f_fused_update(gamma: float = 0.03, kv_decay: float = 0.95,
+                       momentum: float = 0.9, fold_kl: bool = True,
+                       impl: Optional[str] = None, interval: int = 1,
+                       policy: Optional[schedpol.RefreshPolicy] = None
+                       ) -> GradientTransformation:
+    """Preconditioner + KL normalize + EMA momentum as ONE transform.
+
+    The kernel emits P and the per-bucket ⟨p,g⟩ partials in a single
+    launch; the tail is the shared ``finish_normalized_ema``.  Momentum
+    cannot fold into the kernel here (normalization precedes the EMA and
+    its scale is global), so ``fold_momentum`` stays off — the win is the
+    merged launch and the folded inner product.  ``fold_kl=False`` (weight
+    decay upstream) recomputes ⟨p, raw_grads⟩ instead of trusting the
+    kernel partials.
+    """
+
+    def init(params, extras: Extras | None = None):
+        return EvaFState(**_kv_init(params, extras, _FIELDS, policy,
+                                    interval),
+                         trace=_zeros_like_spec(params))
+
+    def update(updates, state: EvaFState, params=None, extras: Extras | None = None):
+        del params
+        flat, plan, used, parts = _kv_step(
+            state, updates, extras, fields=_FIELDS, site='stats/eva_f',
+            policy=policy, interval=interval, kv_decay=kv_decay)
+        k_impl = dispatch.impl_from_extras(extras, impl)
+        out_flat, partials = pre.precondition_tree_fused(
+            flat, used, 'eva_f', gamma, plan=plan, fold_momentum=False,
+            impl=k_impl)
+        p = kvlib.unflatten_params(out_flat)
+        if fold_kl:
+            pg = sum(partials[k][0] for k in sorted(partials))
+        else:
+            pg = tree_vdot(p, extras.raw_grads)
+        out, stored = finish_normalized_ema(p, pg, state.trace, momentum,
+                                            extras.step)
+        return out, EvaFState(**parts, trace=stored)
 
     return GradientTransformation(init, update)
 
@@ -76,14 +107,24 @@ def eva_f_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
 def eva_f(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
           momentum: float = 0.9, weight_decay: float = 0.0,
           use_pallas: bool = False, interval: int = 1,
-          policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
+          policy: Optional[schedpol.RefreshPolicy] = None,
+          fused: bool = False,
+          kernel_impl: Optional[str] = None) -> GradientTransformation:
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
-    parts.append(eva_f_preconditioner(gamma, kv_decay, use_pallas=use_pallas,
-                                      interval=interval, policy=policy))
-    parts.append(kl_normalize())
-    parts.append(ema_trace(momentum))
+    if fused:
+        parts.append(eva_f_fused_update(
+            gamma, kv_decay, momentum, fold_kl=(weight_decay == 0.0),
+            impl=kernel_impl or pre._kernel_impl(use_pallas, None),
+            interval=interval, policy=policy))
+    else:
+        parts.append(eva_f_preconditioner(gamma, kv_decay,
+                                          use_pallas=use_pallas,
+                                          interval=interval, policy=policy,
+                                          impl=kernel_impl))
+        parts.append(kl_normalize())
+        parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

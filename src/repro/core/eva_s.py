@@ -25,11 +25,13 @@ import jax.numpy as jnp
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
-from repro.core.clipping import graft_to_grad_magnitude
-from repro.core.eva import _eva_cached_init, _refresh_snapshot
+from repro.core.clipping import finish_graft_ema, graft_to_grad_magnitude
+from repro.core.eva import (_eva_cached_init, _refresh_snapshot,
+                            _zeros_like_spec)
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
                                   scale_by_schedule)
+from repro.kernels import dispatch
 from repro.schedule import policy as schedpol, runtime as schedrt
 
 
@@ -42,44 +44,109 @@ class EvaSState(NamedTuple):
     running: kvlib.RunningStats
     cached: Any
     sched: schedpol.SchedState
+    # fused path only: the f32 EMA momentum buffer (else in ema_trace state)
+    trace: Any = None
+
+
+def _kv_init_s(params, extras, policy, interval, predicate):
+    flat = kvlib.flatten_params(params)
+    plan = bucketing.build_plan(flat, predicate)
+    zeros = {
+        b.key: kvlib.LayerStats(
+            a_mean=jnp.zeros((len(b.paths),) + b.shape[:-1], jnp.float32),
+            b_mean=jnp.zeros((len(b.paths),) + b.shape[:-2] + b.shape[-1:],
+                             jnp.float32))
+        for b in plan.buckets}
+    pol = schedrt.from_extras(extras).resolve(policy, interval)
+    return dict(running=kvlib.init_running(zeros),
+                cached=_eva_cached_init(pol, zeros),
+                sched=schedpol.init_state(pol, zeros))
+
+
+def _kv_step_s(state, updates, extras, *, policy, interval, kv_decay,
+               predicate):
+    """eva_s per-step stats: fresh (v_in, v_out) from the gradients' own
+    means, bucket-level EMA, snapshot refresh."""
+    pol = schedrt.from_extras(extras).resolve(policy, interval)
+    flat = kvlib.flatten_params(updates)
+    plan = bucketing.build_plan(flat, predicate)
+    g_b = bucketing.gather(plan, {p: flat[p] for p in plan.paths})
+    fresh = {}
+    for b in plan.buckets:
+        vi, vo = pre.grad_kvs(g_b[b.key])
+        fresh[b.key] = kvlib.LayerStats(a_mean=vi, b_mean=vo)
+    stats, running = kvlib.update_running(state.running, fresh, kv_decay)
+    used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
+                                            state.cached)
+    return flat, plan, used, dict(running=running, cached=cached, sched=sched)
 
 
 def eva_s_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
                          use_pallas: bool = False, interval: int = 1,
                          policy: Optional[schedpol.RefreshPolicy] = None,
-                         predicate=default_precon_predicate) -> GradientTransformation:
+                         predicate=default_precon_predicate,
+                         impl: Optional[str] = None) -> GradientTransformation:
 
     def init(params, extras: Extras | None = None):
-        flat = kvlib.flatten_params(params)
-        plan = bucketing.build_plan(flat, predicate)
-        zeros = {
-            b.key: kvlib.LayerStats(
-                a_mean=jnp.zeros((len(b.paths),) + b.shape[:-1], jnp.float32),
-                b_mean=jnp.zeros((len(b.paths),) + b.shape[:-2] + b.shape[-1:],
-                                 jnp.float32))
-            for b in plan.buckets}
-        pol = schedrt.from_extras(extras).resolve(policy, interval)
-        return EvaSState(running=kvlib.init_running(zeros),
-                         cached=_eva_cached_init(pol, zeros),
-                         sched=schedpol.init_state(pol, zeros))
+        return EvaSState(**_kv_init_s(params, extras, policy, interval,
+                                      predicate))
 
     def update(updates, state: EvaSState, params=None, extras: Extras | None = None):
         del params
-        pol = schedrt.from_extras(extras).resolve(policy, interval)
-        flat = kvlib.flatten_params(updates)
-        plan = bucketing.build_plan(flat, predicate)
-        g_b = bucketing.gather(plan, {p: flat[p] for p in plan.paths})
-        fresh = {}
-        for b in plan.buckets:
-            vi, vo = pre.grad_kvs(g_b[b.key])
-            fresh[b.key] = kvlib.LayerStats(a_mean=vi, b_mean=vo)
-        stats, running = kvlib.update_running(state.running, fresh, kv_decay)
-        used, sched, cached = _refresh_snapshot(pol, state.sched, stats,
-                                                state.cached)
+        flat, plan, used, parts = _kv_step_s(
+            state, updates, extras, policy=policy, interval=interval,
+            kv_decay=kv_decay, predicate=predicate)
+        k_impl = dispatch.impl_from_extras(
+            extras, pre._kernel_impl(use_pallas, impl))
         out = pre.precondition_tree(flat, used, 'eva_s', gamma, plan=plan,
-                                    use_pallas=use_pallas)
-        return kvlib.unflatten_params(out), EvaSState(
-            running=running, cached=cached, sched=sched)
+                                    impl=k_impl)
+        return kvlib.unflatten_params(out), EvaSState(**parts)
+
+    return GradientTransformation(init, update)
+
+
+def eva_s_fused_update(gamma: float = 0.03, kv_decay: float = 0.95,
+                       momentum: float = 0.9, fold_graft: bool = True,
+                       impl: Optional[str] = None, interval: int = 1,
+                       policy: Optional[schedpol.RefreshPolicy] = None,
+                       predicate=default_precon_predicate
+                       ) -> GradientTransformation:
+    """Preconditioner + SGD-magnitude graft + EMA momentum as ONE transform.
+
+    The ``eva_fused`` kernel emits P and the per-leaf [⟨p,g⟩, ⟨p,p⟩, ⟨g,g⟩]
+    partials in a single launch per bucket; the graft scale is exactly
+    √(⟨g,g⟩/⟨p,p⟩) from those partials, so the separate per-leaf reduction
+    pass of ``graft_to_grad_magnitude`` disappears.  ``fold_graft=False``
+    (weight decay upstream — kernel g ≠ raw_grads) recomputes the ⟨g,g⟩
+    side from ``extras.raw_grads``.
+    """
+
+    def init(params, extras: Extras | None = None):
+        return EvaSState(**_kv_init_s(params, extras, policy, interval,
+                                      predicate),
+                         trace=_zeros_like_spec(params))
+
+    def update(updates, state: EvaSState, params=None, extras: Extras | None = None):
+        del params
+        flat, plan, used, parts = _kv_step_s(
+            state, updates, extras, policy=policy, interval=interval,
+            kv_decay=kv_decay, predicate=predicate)
+        k_impl = dispatch.impl_from_extras(extras, impl)
+        out_flat, partials = pre.precondition_tree_fused(
+            flat, used, 'eva_s', gamma, plan=plan, fold_momentum=False,
+            impl=k_impl)
+        pp = {p: partials[p][1] for p in partials}
+        if fold_graft:
+            gg = {p: partials[p][2] for p in partials}
+        else:
+            raw = kvlib.flatten_params(extras.raw_grads)
+            gg = {p: jnp.sum(jnp.square(raw[p].astype(jnp.float32)))
+                  for p in partials}
+        out_flat, stored_flat = finish_graft_ema(
+            out_flat, pp, gg, kvlib.flatten_params(state.trace), momentum,
+            extras.step)
+        return kvlib.unflatten_params(out_flat), EvaSState(
+            **parts, trace=kvlib.unflatten_params(stored_flat))
 
     return GradientTransformation(init, update)
 
@@ -87,14 +154,24 @@ def eva_s_preconditioner(gamma: float = 0.03, kv_decay: float = 0.95,
 def eva_s(lr=0.1, gamma: float = 0.03, kv_decay: float = 0.95,
           momentum: float = 0.9, weight_decay: float = 0.0,
           use_pallas: bool = False, interval: int = 1,
-          policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
+          policy: Optional[schedpol.RefreshPolicy] = None,
+          fused: bool = False,
+          kernel_impl: Optional[str] = None) -> GradientTransformation:
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
-    parts.append(eva_s_preconditioner(gamma, kv_decay, use_pallas=use_pallas,
-                                      interval=interval, policy=policy))
-    parts.append(graft_to_grad_magnitude())
-    parts.append(ema_trace(momentum))
+    if fused:
+        parts.append(eva_s_fused_update(
+            gamma, kv_decay, momentum, fold_graft=(weight_decay == 0.0),
+            impl=kernel_impl or pre._kernel_impl(use_pallas, None),
+            interval=interval, policy=policy))
+    else:
+        parts.append(eva_s_preconditioner(gamma, kv_decay,
+                                          use_pallas=use_pallas,
+                                          interval=interval, policy=policy,
+                                          impl=kernel_impl))
+        parts.append(graft_to_grad_magnitude())
+        parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

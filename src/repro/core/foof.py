@@ -17,7 +17,7 @@ from repro.comm import exchange as comm_exchange
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
-from repro.core.clipping import kl_normalize
+from repro.core.clipping import Epilogue, fused_tail, kl_normalize
 from repro.core.eva import _extract, _stats_plan, _zeros_like_spec
 from repro.core.kfac import _damped_inv
 from repro.core.transform import (Extras, GradientTransformation, chain,
@@ -101,13 +101,22 @@ def foof_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
 
 def foof(lr=0.1, gamma: float = 0.03, kf_decay: float = 0.95, interval: int = 1,
          momentum: float = 0.9, weight_decay: float = 0.0,
-         policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
+         policy: Optional[schedpol.RefreshPolicy] = None,
+         fused: bool = False) -> GradientTransformation:
+    """``fused=True`` collapses KL normalize + EMA momentum into the
+    single-traversal ``clipping.fused_tail`` (the solve-based
+    preconditioner itself has nothing kernel-side to fuse); math is
+    unchanged."""
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
     parts.append(foof_preconditioner(gamma, kf_decay, interval, policy=policy))
-    parts.append(kl_normalize())
-    parts.append(ema_trace(momentum))
+    if fused:
+        parts.append(fused_tail(Epilogue(kind='kl_normalize',
+                                         momentum=momentum)))
+    else:
+        parts.append(kl_normalize())
+        parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
-from repro.core.clipping import kl_clip_trace
+from repro.core.clipping import Epilogue, fused_tail, kl_clip_trace
 from repro.comm import exchange as comm_exchange
 from repro.core.eva import _extract, _stats_plan, _zeros_like_spec
 from repro.core.transform import (Extras, GradientTransformation, chain,
@@ -154,12 +154,20 @@ def kfac_preconditioner(gamma: float = 0.03, kf_decay: float = 0.95,
 def kfac(lr=0.1, gamma: float = 0.03, kf_decay: float = 0.95,
          interval: int = 1, kl_kappa: float = 1e-3, momentum: float = 0.9,
          weight_decay: float = 0.0,
-         policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
+         policy: Optional[schedpol.RefreshPolicy] = None,
+         fused: bool = False) -> GradientTransformation:
+    """``fused=True`` routes the trust-region + momentum tail through the
+    single-traversal ``clipping.fused_tail`` — K-FAC's preconditioner is a
+    damped solve (nothing kernel-side to fuse), so the fusion here is the
+    elementwise epilogue pass only; math is unchanged."""
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
     parts.append(kfac_preconditioner(gamma, kf_decay, interval, policy=policy))
-    if kl_kappa is not None:
+    if kl_kappa is not None and fused:
+        parts.append(fused_tail(Epilogue(kind='kl_clip', kappa=kl_kappa,
+                                         lr=lr, momentum=momentum)))
+    elif kl_kappa is not None:
         # momentum lives INSIDE the trust region (see clipping.kl_clip_trace)
         parts.append(kl_clip_trace(kl_kappa, lr, momentum))
     else:

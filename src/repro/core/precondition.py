@@ -5,10 +5,13 @@ leading dims are layer stacks / experts and every formula broadcasts over
 them, which is what lets a whole ``lax.scan``-stacked model be preconditioned
 in one fused XLA region instead of a per-layer Python loop.
 
-``use_pallas=True`` routes the two hot operations (bilinear form + rank-1
-update) through the Pallas TPU kernels in ``repro.kernels``; the default
-pure-jnp path is mathematically identical (the kernels are asserted against
-these functions in tests).
+Kernel routing: ``impl=`` hands the two hot operations (bilinear form +
+rank-1 update) to the dispatch layer (``repro.kernels.dispatch``), which
+picks compiled Pallas / interpret Pallas / the pure-XLA ``ref.py`` path per
+(op, backend, shape, dtype).  ``use_pallas=True`` is the historical alias
+for ``impl='pallas'``.  ``impl=None`` keeps the inline broadcast-jnp path
+below — mathematically identical (the kernels are asserted against these
+functions in tests).
 """
 from __future__ import annotations
 
@@ -29,12 +32,19 @@ def _f32(x):
 # (paper layout ΔW ∝ b̄ āᵀ is for (d_out,d_in) weights; ours is transposed)
 
 
+def _kernel_impl(use_pallas: bool, impl: Optional[str]) -> Optional[str]:
+    """Back-compat shim: ``use_pallas=True`` is ``impl='pallas'``."""
+    return impl or ('pallas' if use_pallas else None)
+
+
 def eva_precondition(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
-                     gamma: float, use_pallas: bool = False) -> jnp.ndarray:
+                     gamma: float, use_pallas: bool = False,
+                     impl: Optional[str] = None) -> jnp.ndarray:
     """g: (..., d_in, d_out); a: (..., d_in); b: (..., d_out)."""
-    if use_pallas:
+    impl = _kernel_impl(use_pallas, impl)
+    if impl:
         from repro.kernels import ops as kops
-        return kops.eva_precondition(g, a, b, gamma)
+        return kops.eva_precondition(g, a, b, gamma, impl=impl)
     g32, a32, b32 = _f32(g), _f32(a), _f32(b)
     dot = jnp.einsum('...io,...i,...o->...', g32, a32, b32)
     denom = gamma + jnp.sum(a32 * a32, -1) * jnp.sum(b32 * b32, -1)
@@ -48,11 +58,13 @@ def eva_precondition(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
 
 
 def eva_f_precondition(g: jnp.ndarray, a: jnp.ndarray, gamma: float,
-                       use_pallas: bool = False) -> jnp.ndarray:
+                       use_pallas: bool = False,
+                       impl: Optional[str] = None) -> jnp.ndarray:
     """g: (..., d_in, d_out); a: (..., d_in)."""
-    if use_pallas:
+    impl = _kernel_impl(use_pallas, impl)
+    if impl:
         from repro.kernels import ops as kops
-        return kops.eva_f_precondition(g, a, gamma)
+        return kops.eva_f_precondition(g, a, gamma, impl=impl)
     g32, a32 = _f32(g), _f32(a)
     u = jnp.einsum('...io,...i->...o', g32, a32)          # āᵀG  (..., d_out)
     denom = gamma + jnp.sum(a32 * a32, -1)
@@ -71,11 +83,13 @@ def grad_kvs(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def eva_s_precondition(g: jnp.ndarray, v_in: jnp.ndarray, v_out: jnp.ndarray,
-                       gamma: float, use_pallas: bool = False) -> jnp.ndarray:
+                       gamma: float, use_pallas: bool = False,
+                       impl: Optional[str] = None) -> jnp.ndarray:
     """Same rank-one form as Eva with (v_in, v_out) in place of (ā, b̄)."""
-    if use_pallas:
+    impl = _kernel_impl(use_pallas, impl)
+    if impl:
         from repro.kernels import ops as kops
-        return kops.eva_precondition(g, v_in, v_out, gamma)
+        return kops.eva_precondition(g, v_in, v_out, gamma, impl=impl)
     g32, vi, vo = _f32(g), _f32(v_in), _f32(v_out)
     dot = jnp.einsum('...io,...i,...o->...', g32, vi, vo)
     denom = gamma + jnp.sum(vi * vi, -1) * jnp.sum(vo * vo, -1)
@@ -147,7 +161,8 @@ def shampoo_precondition(g: jnp.ndarray, m_in: jnp.ndarray, m_out: jnp.ndarray,
 
 
 def precondition_tree(updates: dict, aux: dict, method: str, gamma: float, *,
-                      plan=None, use_pallas: bool = False) -> dict:
+                      plan=None, use_pallas: bool = False,
+                      impl: Optional[str] = None) -> dict:
     """Precondition a flat ``{path: grad}`` tree with ONE vectorized call
     per parameter bucket (paper §3-§4: the formulas broadcast, so same-shape
     layers batch into a single launch instead of a per-path Python loop).
@@ -171,7 +186,11 @@ def precondition_tree(updates: dict, aux: dict, method: str, gamma: float, *,
       plan: ``bucketing.BucketPlan`` built at ``init_opt_state`` time;
         derived (memoized) from ``aux``'s paths when omitted.
       use_pallas: route the rank-one methods through the grid-folded Pallas
-        kernels (one launch per bucket, ``kernels/ops.py``).
+        kernels (one launch per bucket, ``kernels/ops.py``) — alias for
+        ``impl='pallas'``.
+      impl: kernel dispatch request for the rank-one methods
+        (``kernels/dispatch.py``: 'auto' | 'pallas' | 'pallas_interpret' |
+        'xla'); ``None`` keeps the inline broadcast-jnp formulas above.
 
     Bucket layout & version support: buckets group paths by (shape, dtype)
     with a new stacking axis 0 (``bucketing.build_plan``); scan-stacked
@@ -210,13 +229,13 @@ def precondition_tree(updates: dict, aux: dict, method: str, gamma: float, *,
         fuse it with one ``lax.map`` (or apply directly per item)."""
         if method == 'eva':
             return eva_precondition(g, st.a_mean, st.b_mean, gamma,
-                                    use_pallas=use_pallas)
+                                    use_pallas=use_pallas, impl=impl)
         if method == 'eva_f':
             return eva_f_precondition(g, st.a_mean, gamma,
-                                      use_pallas=use_pallas)
+                                      use_pallas=use_pallas, impl=impl)
         if method == 'eva_s':
             return eva_s_precondition(g, st.a_mean, st.b_mean, gamma,
-                                      use_pallas=use_pallas)
+                                      use_pallas=use_pallas, impl=impl)
         if method == 'foof':
             if not stacked:
                 return foof_precondition(g, st.a_outer, gamma)
@@ -259,6 +278,98 @@ def precondition_tree(updates: dict, aux: dict, method: str, gamma: float, *,
                 if aux_is_bucketed else aux[p]
             out[p] = one_bucket(b, updates[p], st, False)
     return out
+
+
+def precondition_tree_fused(updates: dict, aux: dict, method: str,
+                            gamma: float, *, plan=None, trace=None,
+                            momentum: float = 0.0,
+                            fold_momentum: bool = False,
+                            impl: Optional[str] = None):
+    """Fused precondition → update-epilogue over a flat gradient tree.
+
+    One ``eva_fused``/``eva_f_fused`` dispatch per bucket instead of the
+    bilinear + rank1_update pair plus separate momentum/inner-product tree
+    passes (``kernels/fused.py``).  Rank-one methods only ('eva' | 'eva_f' |
+    'eva_s'); paths outside the plan pass through with the same epilogue
+    applied in jnp.
+
+    Args:
+      trace: flat ``{path: f32 momentum buffer}`` matching ``updates``
+        (missing paths get zeros); only read when ``fold_momentum``.
+      momentum: heavy-ball μ folded into the output when ``fold_momentum``.
+      fold_momentum: emit ``out = μ·trace + P`` (the kl_clip_trace
+        accumulate step) instead of the bare preconditioned ``P``.
+
+    Returns ``(out, partials)``: ``out`` — flat ``{path: f32 array}``;
+    ``partials`` — flat ``{path: (3,) f32}`` per-leaf epilogue sums
+    ``[⟨out,g⟩, ⟨out,out⟩, ⟨g,g⟩]`` (``g`` = the *incoming* updates, i.e.
+    the preconditioner input — equal to the raw gradients only when no
+    transform ran before the preconditioner; callers gate the KL fold on
+    that, see ``core/eva.py``).
+    """
+    from repro.core import bucketing
+    from repro.kernels import ops as kops
+
+    if method not in ('eva', 'eva_f', 'eva_s'):
+        raise ValueError(f'precondition_tree_fused: rank-one methods only, '
+                         f'got {method!r}')
+    if plan is None:
+        sel = {p: updates[p] for p in aux if p in updates}
+        if aux and not sel:
+            raise ValueError(
+                'precondition_tree_fused: no aux key matches an update path '
+                '— bucket-keyed aux requires an explicit plan=')
+        plan = bucketing.build_plan(sel)
+    aux_is_bucketed = bucketing.is_bucketed(plan, aux)
+    trace = trace or {}
+    mu = momentum if fold_momentum else 0.0
+
+    def m_for(p):
+        m = trace.get(p)
+        return jnp.zeros(updates[p].shape, jnp.float32) if m is None \
+            else m.astype(jnp.float32)
+
+    def run(g, st, m):
+        if method == 'eva_f':
+            return kops.eva_f_fused(g, st.a_mean, gamma, m, mu,
+                                    fold_momentum=fold_momentum, impl=impl)
+        return kops.eva_fused(g, st.a_mean, st.b_mean, gamma, m, mu,
+                              fold_momentum=fold_momentum, impl=impl)
+
+    out, partials = {}, {}
+    big = [b for b in plan.buckets if b.stacked]
+    if big:
+        sub = bucketing.BucketPlan(buckets=tuple(big))
+        aux_b = {b.key: aux[b.key] for b in big} if aux_is_bucketed \
+            else bucketing.gather_tree(sub, aux)
+        g_b = bucketing.gather(sub, {p: updates[p] for p in sub.paths})
+        m_b = bucketing.gather(sub, {p: m_for(p) for p in sub.paths})
+        for b in big:
+            o, ax = run(g_b[b.key], aux_b[b.key], m_b[b.key])
+            for i, p in enumerate(b.paths):
+                out[p] = o[i]
+                # scan-stacked leaves carry (S, 3) partials; the epilogue
+                # scalars are per *tree leaf*, so sum the item dims away
+                partials[p] = ax[i].reshape(-1, 3).sum(axis=0)
+    for b in plan.buckets:
+        if b.stacked:
+            continue
+        for i, p in enumerate(b.paths):
+            st = jax.tree_util.tree_map(lambda x, i=i: x[i], aux[b.key]) \
+                if aux_is_bucketed else aux[p]
+            o, ax = run(updates[p], st, m_for(p))
+            out[p] = o
+            partials[p] = ax.reshape(-1, 3).sum(axis=0)
+    pre_paths = set(plan.paths)
+    for p, g in updates.items():
+        if p in pre_paths:
+            continue
+        g32 = g.astype(jnp.float32)
+        o = mu * m_for(p) + g32 if fold_momentum else g32
+        out[p] = o
+        partials[p] = jnp.stack([jnp.sum(o * g32), jnp.sum(o * o),
+                                 jnp.sum(g32 * g32)])
+    return out, partials
 
 
 def apply_left(g: jnp.ndarray, op_in: jnp.ndarray) -> jnp.ndarray:

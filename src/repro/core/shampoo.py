@@ -21,7 +21,8 @@ from repro.comm import exchange as comm_exchange
 from repro.core import bucketing
 from repro.core import kv as kvlib
 from repro.core import precondition as pre
-from repro.core.clipping import graft_to_grad_magnitude
+from repro.core.clipping import (Epilogue, fused_tail,
+                                 graft_to_grad_magnitude)
 from repro.core.eva_s import default_precon_predicate
 from repro.core.transform import (Extras, GradientTransformation, chain,
                                   add_decayed_weights, ema_trace,
@@ -144,14 +145,21 @@ def shampoo_preconditioner(gamma: float = 1e-4, eps_init: float = 1e-6,
 def shampoo(lr=0.1, gamma: float = 1e-4, interval: int = 1,
             momentum: float = 0.9, weight_decay: float = 0.0,
             graft: bool = True,
-            policy: Optional[schedpol.RefreshPolicy] = None) -> GradientTransformation:
+            policy: Optional[schedpol.RefreshPolicy] = None,
+            fused: bool = False) -> GradientTransformation:
+    """``fused=True`` collapses graft + EMA momentum into the
+    single-traversal ``clipping.fused_tail`` (the eigh-based preconditioner
+    itself has nothing kernel-side to fuse); math is unchanged."""
     parts = []
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay))
     parts.append(shampoo_preconditioner(gamma, interval=interval, policy=policy))
-    if graft:
-        parts.append(graft_to_grad_magnitude())
-    parts.append(ema_trace(momentum))
+    if graft and fused:
+        parts.append(fused_tail(Epilogue(kind='graft', momentum=momentum)))
+    else:
+        if graft:
+            parts.append(graft_to_grad_magnitude())
+        parts.append(ema_trace(momentum))
     parts.append(scale_by_schedule(lr if callable(lr) else (lambda _: lr)))
     return chain(*parts)
 

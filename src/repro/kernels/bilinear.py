@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiles import fit_block
+
 
 def _tile_bilinear(g, a, b):
     """Contract one (bm, bn) tile against its a/b slices -> scalar f32."""
@@ -76,7 +78,7 @@ def bilinear(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
              interpret: bool = True) -> jnp.ndarray:
     """aᵀ G b -> () f32.  g: (d_in, d_out); a: (d_in,); b: (d_out,)."""
     d_in, d_out = g.shape
-    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    bm, bn = fit_block(d_in, block_in), fit_block(d_out, block_out)
     g, a, b = _pad2(g, a, b, bm, bn)
     m, n = g.shape
     out = pl.pallas_call(
@@ -101,7 +103,7 @@ def bilinear_stacked(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
     """Stacked aᵀ G b -> (L,) f32.  g: (L, d_in, d_out); a: (L, d_in);
     b: (L, d_out).  One launch; the stack rides the leading grid axis."""
     L, d_in, d_out = g.shape
-    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    bm, bn = fit_block(d_in, block_in), fit_block(d_out, block_out)
     g, a, b = _pad2(g, a, b, bm, bn)
     m, n = g.shape[1:]
     out = pl.pallas_call(

@@ -1,0 +1,234 @@
+"""Pallas kernels: fused Eva precondition -> update epilogue, one launch.
+
+The composed bucket hot path costs ~4 gradient-sized HBM round trips after
+the stats are ready: ``bilinear`` reads G, ``rank1_update`` reads G and
+writes P, the momentum trace reads (m, P) and writes m, and the KL trust
+region reads (m, G) again for the inner product.  These kernels do all of
+it in ONE pass over G per bucket:
+
+  phase 0  accumulate the reduction (aᵀGb for Eva / aᵀG for Eva-f) into a
+           tiny VMEM-resident output, visiting tiles in exactly the same
+           order as the standalone ``bilinear``/``matvec`` kernels — the
+           reduction is bit-identical to the composed path;
+  phase 1  re-stream G: compute the rank-one tile P = s·(G − c·abᵀ)
+           (bit-identical to ``rank1_update``), optionally fold the
+           heavy-ball momentum ``out = μ·m + P``, write the f32 output
+           tile, and accumulate the epilogue partials
+           ``aux = [⟨out,G⟩, ⟨out,out⟩, ⟨G,G⟩]`` per stack item.
+
+The trust-region scale ν (Eq. 16) depends on the GLOBAL ⟨u,g⟩ across every
+parameter, so it cannot be applied inside a per-bucket launch; the aux
+partials make the remaining host-side tail a scalar reduction plus one
+cheap elementwise scale.  ``aux``'s tile-major accumulation order differs
+from the composed ``tree_vdot`` (which reduces each leaf fully first), so
+the folded tail agrees with the composed chain to f32 reduction tolerance
+(~1e-6 relative).
+
+Both kernels use a two-phase grid ``(L, 2, ...)``: TPU grid iterations are
+sequential per core, so every phase-0 tile of a stack item completes before
+its phase-1 tiles read the reduction back.  G is read twice from HBM — the
+reduction output is far too small to carry tile partials for a one-read
+formulation — so the win over the composed path is the dropped P/m/vdot
+round trips, not the G reads.
+
+"Bit-identical" above holds per tile formula; across a whole launch the
+in-kernel coeff division (``dot/denom``) can contract differently from the
+host-side division of the composed path, so end-to-end agreement with the
+composed chain is within 1 f32 ulp of the update scale (γ·|Δ| < 1e-6),
+not universally bit-exact — see tests/test_fused.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bilinear import _tile_bilinear
+from repro.kernels.matvec import _tile_matvec
+from repro.kernels.rank1_update import _rank1_tile
+from repro.kernels.tiles import fit_block
+
+
+def _epilogue_tile(g, p, m, mu, fold, o_ref, aux_ref):
+    """Shared phase-1 tail: momentum fold + output write + aux partials."""
+    out = mu * m + p if fold else p
+    o_ref[0] = out
+    aux_ref[0, 0] += jnp.sum(out * g)
+    aux_ref[0, 1] += jnp.sum(out * out)
+    aux_ref[0, 2] += jnp.sum(g * g)
+
+
+def _make_eva_fused_kernel(fold: bool):
+    def kernel(g_ref, a_ref, b_ref, sc_ref, m_ref, o_ref, dot_ref, aux_ref):
+        ph = pl.program_id(1)
+        i = pl.program_id(2)
+        j = pl.program_id(3)
+
+        @pl.when((ph == 0) & (i == 0) & (j == 0))
+        def _init():
+            dot_ref[...] = jnp.zeros_like(dot_ref)
+            aux_ref[...] = jnp.zeros_like(aux_ref)
+
+        g = g_ref[0].astype(jnp.float32)
+        a = a_ref[0].astype(jnp.float32)
+        b = b_ref[0].astype(jnp.float32)
+
+        @pl.when(ph == 0)
+        def _reduce():
+            dot_ref[0, 0] += _tile_bilinear(g, a, b)
+
+        @pl.when(ph == 1)
+        def _emit():
+            denom = sc_ref[0, 0]
+            scale = sc_ref[0, 1]
+            mu = sc_ref[0, 2]
+            p = _rank1_tile(g, a, b, dot_ref[0, 0] / denom, scale)
+            _epilogue_tile(g, p, m_ref[0], mu, fold, o_ref, aux_ref)
+
+    return kernel
+
+
+def _make_eva_f_fused_kernel(fold: bool):
+    def kernel(g_ref, a_ref, sc_ref, m_ref, o_ref, u_ref, aux_ref):
+        ph = pl.program_id(1)
+        j = pl.program_id(2)
+        i = pl.program_id(3)
+
+        # u_ref's block follows j, so each column block zeroes at the start
+        # of ITS reduction; aux_ref is one shared block per stack item
+        @pl.when((ph == 0) & (i == 0))
+        def _init_u():
+            u_ref[...] = jnp.zeros_like(u_ref)
+
+        @pl.when((ph == 0) & (j == 0) & (i == 0))
+        def _init_aux():
+            aux_ref[...] = jnp.zeros_like(aux_ref)
+
+        g = g_ref[0].astype(jnp.float32)
+        a = a_ref[0].astype(jnp.float32)
+
+        @pl.when(ph == 0)
+        def _reduce():
+            u_ref[0] += _tile_matvec(g, a)
+
+        @pl.when(ph == 1)
+        def _emit():
+            denom = sc_ref[0, 0]
+            scale = sc_ref[0, 1]
+            mu = sc_ref[0, 2]
+            p = _rank1_tile(g, a, u_ref[0], 1.0 / denom, scale)
+            _epilogue_tile(g, p, m_ref[0], mu, fold, o_ref, aux_ref)
+
+    return kernel
+
+
+def _pad_stacked(g, vecs_in, vecs_out, m, bm, bn):
+    d_in, d_out = g.shape[1:]
+    pad_in = (-d_in) % bm
+    pad_out = (-d_out) % bn
+    if pad_in or pad_out:
+        g = jnp.pad(g, ((0, 0), (0, pad_in), (0, pad_out)))
+        m = jnp.pad(m, ((0, 0), (0, pad_in), (0, pad_out)))
+        vecs_in = [jnp.pad(v, ((0, 0), (0, pad_in))) for v in vecs_in]
+        vecs_out = [jnp.pad(v, ((0, 0), (0, pad_out))) for v in vecs_out]
+    return g, vecs_in, vecs_out, m, (d_in, d_out)
+
+
+@functools.partial(jax.jit, static_argnames=('gamma', 'mu', 'fold_momentum',
+                                             'block_in', 'block_out',
+                                             'interpret'))
+def eva_fused_stacked(g, a, b, gamma: float, m, mu: float,
+                      fold_momentum: bool = True,
+                      block_in: int = 512, block_out: int = 512,
+                      interpret: bool = True):
+    """Fused Eva (Eq. 13) + epilogue.  g: (L, d_in, d_out); a: (L, d_in);
+    b: (L, d_out); m: (L, d_in, d_out) f32 momentum buffer.
+
+    Returns ``(out, aux)``: out (L, d_in, d_out) f32 = μ·m + P (P only when
+    ``fold_momentum=False``); aux (L, 3) f32 = [⟨out,g⟩, ⟨out,out⟩, ⟨g,g⟩].
+    """
+    L = g.shape[0]
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    denom = gamma + jnp.sum(a32 * a32, -1) * jnp.sum(b32 * b32, -1)
+    sc = jnp.stack([denom,
+                    jnp.full((L,), 1.0 / gamma, jnp.float32),
+                    jnp.full((L,), mu, jnp.float32)], axis=-1)
+    bm = fit_block(g.shape[1], block_in)
+    bn = fit_block(g.shape[2], block_out)
+    g, (a32,), (b32,), m, (d_in, d_out) = _pad_stacked(
+        g, [a32], [b32], m.astype(jnp.float32), bm, bn)
+    mp, np_ = g.shape[1:]
+    out, _, aux = pl.pallas_call(
+        _make_eva_fused_kernel(fold_momentum),
+        grid=(L, 2, mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda l, p, i, j: (l, i, j)),
+            pl.BlockSpec((1, bm), lambda l, p, i, j: (l, i)),
+            pl.BlockSpec((1, bn), lambda l, p, i, j: (l, j)),
+            pl.BlockSpec((1, 3), lambda l, p, i, j: (l, 0)),
+            pl.BlockSpec((1, bm, bn), lambda l, p, i, j: (l, i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda l, p, i, j: (l, i, j)),
+            pl.BlockSpec((1, 1), lambda l, p, i, j: (l, 0)),
+            pl.BlockSpec((1, 3), lambda l, p, i, j: (l, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((L, 1), jnp.float32),
+            jax.ShapeDtypeStruct((L, 3), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, a32, b32, sc, m)
+    if (mp, np_) != (d_in, d_out):
+        out = out[:, :d_in, :d_out]
+    return out, aux
+
+
+@functools.partial(jax.jit, static_argnames=('gamma', 'mu', 'fold_momentum',
+                                             'block_in', 'block_out',
+                                             'interpret'))
+def eva_f_fused_stacked(g, a, gamma: float, m, mu: float,
+                        fold_momentum: bool = True,
+                        block_in: int = 512, block_out: int = 512,
+                        interpret: bool = True):
+    """Fused Eva-f (Eq. 21) + epilogue; same contract as
+    :func:`eva_fused_stacked` with u = aᵀG accumulated in phase 0."""
+    L = g.shape[0]
+    a32 = a.astype(jnp.float32)
+    denom = gamma + jnp.sum(a32 * a32, -1)
+    sc = jnp.stack([denom,
+                    jnp.full((L,), 1.0 / gamma, jnp.float32),
+                    jnp.full((L,), mu, jnp.float32)], axis=-1)
+    bm = fit_block(g.shape[1], block_in)
+    bn = fit_block(g.shape[2], block_out)
+    g, (a32,), _, m, (d_in, d_out) = _pad_stacked(
+        g, [a32], [], m.astype(jnp.float32), bm, bn)
+    mp, np_ = g.shape[1:]
+    out, _, aux = pl.pallas_call(
+        _make_eva_f_fused_kernel(fold_momentum),
+        grid=(L, 2, np_ // bn, mp // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda l, p, j, i: (l, i, j)),
+            pl.BlockSpec((1, bm), lambda l, p, j, i: (l, i)),
+            pl.BlockSpec((1, 3), lambda l, p, j, i: (l, 0)),
+            pl.BlockSpec((1, bm, bn), lambda l, p, j, i: (l, i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda l, p, j, i: (l, i, j)),
+            pl.BlockSpec((1, bn), lambda l, p, j, i: (l, j)),
+            pl.BlockSpec((1, 3), lambda l, p, j, i: (l, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((L, np_), jnp.float32),
+            jax.ShapeDtypeStruct((L, 3), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, a32, sc, m)
+    if (mp, np_) != (d_in, d_out):
+        out = out[:, :d_in, :d_out]
+    return out, aux

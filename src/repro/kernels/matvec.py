@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiles import fit_block
+
 
 def _tile_matvec(g, a):
     """(bm, bn) tile × (bm,) slice -> (bn,) partial products, f32."""
@@ -56,7 +58,7 @@ def matvec(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
            block_out: int = 512, interpret: bool = True) -> jnp.ndarray:
     """u = aᵀ G.  g: (d_in, d_out); a: (d_in,) -> (d_out,) f32."""
     d_in, d_out = g.shape
-    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    bm, bn = fit_block(d_in, block_in), fit_block(d_out, block_out)
     pad_in = (-d_in) % bm
     pad_out = (-d_out) % bn
     if pad_in or pad_out:
@@ -110,7 +112,7 @@ def matvec_cols(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
     R, m = a.shape
     m_g, n = g.shape
     assert m == m_g, (a.shape, g.shape)
-    bm, bn = min(block_in, m), min(block_out, n)
+    bm, bn = fit_block(m, block_in), fit_block(n, block_out)
     pad_m = (-m) % bm
     pad_n = (-n) % bn
     if pad_m or pad_n:
@@ -156,7 +158,7 @@ def matvec_cols_stacked(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
     L, R, m = a.shape
     Lg, m_g, n = g.shape
     assert (L, m) == (Lg, m_g), (a.shape, g.shape)
-    bm, bn = min(block_in, m), min(block_out, n)
+    bm, bn = fit_block(m, block_in), fit_block(n, block_out)
     pad_m = (-m) % bm
     pad_n = (-n) % bn
     if pad_m or pad_n:
@@ -183,7 +185,7 @@ def matvec_stacked(g: jnp.ndarray, a: jnp.ndarray, block_in: int = 512,
     """Stacked u = aᵀ G.  g: (L, d_in, d_out); a: (L, d_in) -> (L, d_out)
     f32.  One launch; the stack rides the leading grid axis."""
     L, d_in, d_out = g.shape
-    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    bm, bn = fit_block(d_in, block_in), fit_block(d_out, block_out)
     pad_in = (-d_in) % bm
     pad_out = (-d_out) % bn
     if pad_in or pad_out:

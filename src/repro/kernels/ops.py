@@ -1,8 +1,12 @@
-"""Jit'd wrappers composing the Pallas kernels into the Eva ops.
+"""Composed Eva ops on top of the kernel dispatch layer.
 
-On TPU these run compiled (``interpret=False``); on this CPU container the
-same kernel bodies execute under ``interpret=True`` (Python semantics) —
-identical math, validated against ``ref.py`` in tests/test_kernels.py.
+Each op routes every primitive (bilinear / matvec / rank1_update) through
+``kernels/dispatch.py``, which picks compiled Pallas, interpret Pallas, or
+the pure-XLA ``ref.py`` path per (op, backend, shape, dtype) — see that
+module for the resolution rules.  The historical import-time ``INTERPRET``
+constant is gone; backend selection is a runtime setting
+(``dispatch.set_default_impl`` / ``dispatch.impl_override``) plus the
+per-call ``impl=`` argument threaded down from ``core/precondition.py``.
 
 Leading stack dims (scan-stacked layers, experts, bucket stacks — see
 ``core/bucketing``) are flattened into one leading axis and folded into the
@@ -13,15 +17,11 @@ batched lowering changes accumulation order).
 """
 from __future__ import annotations
 
-import jax
+from typing import Optional
+
 import jax.numpy as jnp
 
-from repro.kernels.bilinear import bilinear, bilinear_stacked
-from repro.kernels.matvec import matvec, matvec_stacked
-from repro.kernels.rank1_update import rank1_update, rank1_update_stacked
-
-# flipped to False on real TPU backends
-INTERPRET = jax.default_backend() != 'tpu'
+from repro.kernels import dispatch
 
 
 def _fold(x, n_lead):
@@ -30,43 +30,77 @@ def _fold(x, n_lead):
 
 
 def eva_precondition(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
-                     gamma: float) -> jnp.ndarray:
-    """Fused Eq. 13 via bilinear + rank1_update kernels.
+                     gamma: float, impl: Optional[str] = None) -> jnp.ndarray:
+    """Eq. 13 via dispatched bilinear + rank1_update.
 
     g: (..., d_in, d_out); a: (..., d_in); b: (..., d_out); any leading
     stack dims run in a single grid-folded launch.
     """
     if g.ndim == 2:
-        dot = bilinear(g, a, b, interpret=INTERPRET)
+        dot = dispatch.bilinear(g, a, b, impl=impl)
         a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
         denom = gamma + jnp.sum(a32 * a32) * jnp.sum(b32 * b32)
-        return rank1_update(g, a, b, dot / denom, 1.0 / gamma,
-                            interpret=INTERPRET)
+        return dispatch.rank1_update(g, a, b, dot / denom, 1.0 / gamma,
+                                     impl=impl)
     lead = g.shape[:-2]
     gs, as_, bs = _fold(g, g.ndim - 2), _fold(a, a.ndim - 1), _fold(b, b.ndim - 1)
-    dot = bilinear_stacked(gs, as_, bs, interpret=INTERPRET)          # (L,)
+    dot = dispatch.bilinear_stacked(gs, as_, bs, impl=impl)            # (L,)
     a32, b32 = as_.astype(jnp.float32), bs.astype(jnp.float32)
     denom = gamma + jnp.sum(a32 * a32, -1) * jnp.sum(b32 * b32, -1)
     scale = jnp.full_like(denom, 1.0 / gamma)
-    out = rank1_update_stacked(gs, as_, bs, dot / denom, scale,
-                               interpret=INTERPRET)
+    out = dispatch.rank1_update_stacked(gs, as_, bs, dot / denom, scale,
+                                        impl=impl)
     return out.reshape(lead + out.shape[1:])
 
 
-def eva_f_precondition(g: jnp.ndarray, a: jnp.ndarray, gamma: float) -> jnp.ndarray:
-    """Fused Eq. 21 via matvec + rank1_update kernels (stack grid-folded)."""
+def eva_f_precondition(g: jnp.ndarray, a: jnp.ndarray, gamma: float,
+                       impl: Optional[str] = None) -> jnp.ndarray:
+    """Eq. 21 via dispatched matvec + rank1_update (stack grid-folded)."""
     if g.ndim == 2:
-        u = matvec(g, a, interpret=INTERPRET)
+        u = dispatch.matvec(g, a, impl=impl)
         a32 = a.astype(jnp.float32)
         denom = gamma + jnp.sum(a32 * a32)
-        return rank1_update(g, a, u, 1.0 / denom, 1.0 / gamma,
-                            interpret=INTERPRET)
+        return dispatch.rank1_update(g, a, u, 1.0 / denom, 1.0 / gamma,
+                                     impl=impl)
     lead = g.shape[:-2]
     gs, as_ = _fold(g, g.ndim - 2), _fold(a, a.ndim - 1)
-    u = matvec_stacked(gs, as_, interpret=INTERPRET)                  # (L, d_out)
+    u = dispatch.matvec_stacked(gs, as_, impl=impl)                    # (L, d_out)
     a32 = as_.astype(jnp.float32)
     denom = gamma + jnp.sum(a32 * a32, -1)
     scale = jnp.full_like(denom, 1.0 / gamma)
-    out = rank1_update_stacked(gs, as_, u, 1.0 / denom, scale,
-                               interpret=INTERPRET)
+    out = dispatch.rank1_update_stacked(gs, as_, u, 1.0 / denom, scale,
+                                        impl=impl)
     return out.reshape(lead + out.shape[1:])
+
+
+def eva_fused(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, gamma: float,
+              m: jnp.ndarray, mu: float, fold_momentum: bool = True,
+              impl: Optional[str] = None):
+    """Eq. 13 + momentum/epilogue in one dispatched launch.
+
+    Accepts arbitrary leading stack dims like :func:`eva_precondition`;
+    returns ``(out, aux)`` with out f32 shaped like g and aux (..., 3)
+    per-item epilogue partials [⟨out,g⟩, ⟨out,out⟩, ⟨g,g⟩].
+    """
+    lead = g.shape[:-2]
+    n = g.ndim - 2
+    gs, as_, bs, ms = (_fold(g, n), _fold(a, a.ndim - 1),
+                       _fold(b, b.ndim - 1), _fold(m, n))
+    out, aux = dispatch.eva_fused_stacked(gs, as_, bs, gamma, ms, mu,
+                                          fold_momentum=fold_momentum,
+                                          impl=impl)
+    return out.reshape(lead + out.shape[1:]), aux.reshape(lead + (3,))
+
+
+def eva_f_fused(g: jnp.ndarray, a: jnp.ndarray, gamma: float,
+                m: jnp.ndarray, mu: float, fold_momentum: bool = True,
+                impl: Optional[str] = None):
+    """Eq. 21 + momentum/epilogue in one dispatched launch; same contract
+    as :func:`eva_fused`."""
+    lead = g.shape[:-2]
+    n = g.ndim - 2
+    gs, as_, ms = _fold(g, n), _fold(a, a.ndim - 1), _fold(m, n)
+    out, aux = dispatch.eva_f_fused_stacked(gs, as_, gamma, ms, mu,
+                                            fold_momentum=fold_momentum,
+                                            impl=impl)
+    return out.reshape(lead + out.shape[1:]), aux.reshape(lead + (3,))

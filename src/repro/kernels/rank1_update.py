@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiles import fit_block
+
 
 def _rank1_tile(g, a, b, coeff, scale):
     return scale * (g - coeff * (a[:, None] * b[None, :]))
@@ -56,7 +58,7 @@ def rank1_update(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
     garbage that is sliced off — cheaper than ragged BlockSpecs).
     """
     d_in, d_out = g.shape
-    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    bm, bn = fit_block(d_in, block_in), fit_block(d_out, block_out)
     pad_in = (-d_in) % bm
     pad_out = (-d_out) % bn
     if pad_in or pad_out:
@@ -94,7 +96,7 @@ def rank1_update_stacked(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
     g: (L, d_in, d_out); a: (L, d_in); b: (L, d_out); coeff/scale: (L,).
     """
     L, d_in, d_out = g.shape
-    bm, bn = min(block_in, d_in), min(block_out, d_out)
+    bm, bn = fit_block(d_in, block_in), fit_block(d_out, block_out)
     pad_in = (-d_in) % bm
     pad_out = (-d_out) % bn
     if pad_in or pad_out:

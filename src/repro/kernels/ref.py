@@ -1,7 +1,12 @@
-"""Pure-jnp oracles for the Pallas kernels (assert_allclose targets).
+"""Pure-jnp oracles for the Pallas kernels — and the XLA dispatch path.
 
-Layouts match ``repro.core.precondition``: g (d_in, d_out), a (d_in,),
-b (d_out,).
+Historically these were only ``assert_allclose`` targets for the kernel
+tests; the dispatch layer (``kernels/dispatch.py``) now routes production
+calls here when ``impl='xla'`` (the CPU default), so every op accepts both
+the single-matrix layout and the stacked/broadcast layout via ellipsis
+einsums.  Layouts match ``repro.core.precondition``: g (..., d_in, d_out),
+a (..., d_in), b (..., d_out).  Reductions are f32 regardless of input
+dtype, like the kernels.
 """
 from __future__ import annotations
 
@@ -9,22 +14,35 @@ import jax.numpy as jnp
 
 
 def matvec_ref(g: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
-    """u = aᵀ G — contraction over d_in.  (d_in, d_out),(d_in,) -> (d_out,)"""
-    return jnp.einsum('io,i->o', g.astype(jnp.float32), a.astype(jnp.float32))
+    """u = aᵀ G — contraction over d_in.  (..., d_in, d_out),(..., d_in)
+    -> (..., d_out) f32."""
+    return jnp.einsum('...io,...i->...o', g.astype(jnp.float32),
+                      a.astype(jnp.float32))
+
+
+def matvec_cols_ref(g: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Column-blocked partial matvec U_w = A_w G_w (factor sharding).
+
+    g (..., m, n) row band; a (..., R, m) owned columns -> (..., R, n) f32
+    partials (see ``kernels/matvec.py::matvec_cols``)."""
+    return jnp.einsum('...mn,...rm->...rn', g.astype(jnp.float32),
+                      a.astype(jnp.float32))
 
 
 def bilinear_ref(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """aᵀ G b (scalar)."""
-    return jnp.einsum('io,i,o->', g.astype(jnp.float32),
+    """aᵀ G b — scalar per leading index.  -> (...) f32."""
+    return jnp.einsum('...io,...i,...o->...', g.astype(jnp.float32),
                       a.astype(jnp.float32), b.astype(jnp.float32))
 
 
 def rank1_update_ref(g: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
                      coeff, scale) -> jnp.ndarray:
-    """P = scale · (G − coeff · a bᵀ)."""
+    """P = scale · (G − coeff · a bᵀ); coeff/scale scalar or (...,)."""
     g32 = g.astype(jnp.float32)
-    out = scale * (g32 - coeff * (a.astype(jnp.float32)[:, None] *
-                                  b.astype(jnp.float32)[None, :]))
+    coeff = jnp.asarray(coeff, jnp.float32)[..., None, None]
+    scale = jnp.asarray(scale, jnp.float32)[..., None, None]
+    out = scale * (g32 - coeff * (a.astype(jnp.float32)[..., :, None] *
+                                  b.astype(jnp.float32)[..., None, :]))
     return out.astype(g.dtype)
 
 
@@ -32,14 +50,55 @@ def eva_precondition_ref(g, a, b, gamma: float) -> jnp.ndarray:
     """Full fused Eva preconditioning (Eq. 13), the composition target."""
     dot = bilinear_ref(g, a, b)
     a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
-    denom = gamma + jnp.sum(a32 * a32) * jnp.sum(b32 * b32)
-    return rank1_update_ref(g, a, b, dot / denom, 1.0 / gamma)
+    denom = gamma + jnp.sum(a32 * a32, -1) * jnp.sum(b32 * b32, -1)
+    return rank1_update_ref(g, a, b, dot / denom,
+                            jnp.full_like(denom, 1.0 / gamma))
 
 
 def eva_f_precondition_ref(g, a, gamma: float) -> jnp.ndarray:
     """Eva-f (Eq. 21): P = (G − a (aᵀG) / (γ+‖a‖²)) / γ."""
     u = matvec_ref(g, a)
     a32 = a.astype(jnp.float32)
-    denom = gamma + jnp.sum(a32 * a32)
+    denom = gamma + jnp.sum(a32 * a32, -1)
     g32 = g.astype(jnp.float32)
-    return ((g32 - (a32[:, None] * u[None, :]) / denom) / gamma).astype(g.dtype)
+    outer = a32[..., :, None] * u[..., None, :]
+    return ((g32 - outer / denom[..., None, None]) / gamma).astype(g.dtype)
+
+
+def _fused_epilogue(g32, p, m, mu, fold_momentum):
+    out = mu * m.astype(jnp.float32) + p if fold_momentum else p
+    aux = jnp.stack([jnp.sum(out * g32, (-2, -1)),
+                     jnp.sum(out * out, (-2, -1)),
+                     jnp.sum(g32 * g32, (-2, -1))], axis=-1)
+    return out, aux
+
+
+def eva_fused_ref(g, a, b, gamma: float, m, mu: float,
+                  fold_momentum: bool = True):
+    """XLA twin of ``kernels/fused.py::eva_fused_stacked``.
+
+    Returns ``(out, aux)``: out (..., d_in, d_out) f32 = μ·m + P (or P when
+    ``fold_momentum`` is off); aux (..., 3) f32 = [⟨out,g⟩, ⟨out,out⟩,
+    ⟨g,g⟩] per leading index.
+    """
+    g32 = g.astype(jnp.float32)
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    dot = bilinear_ref(g, a, b)
+    denom = gamma + jnp.sum(a32 * a32, -1) * jnp.sum(b32 * b32, -1)
+    coeff = (dot / denom)[..., None, None]
+    # multiply by the precomputed reciprocal, matching _rank1_tile's
+    # scale operand bit-for-bit (x/gamma rounds differently)
+    p = (1.0 / gamma) * (g32 - coeff * (a32[..., :, None] * b32[..., None, :]))
+    return _fused_epilogue(g32, p, m, mu, fold_momentum)
+
+
+def eva_f_fused_ref(g, a, gamma: float, m, mu: float,
+                    fold_momentum: bool = True):
+    """XLA twin of ``kernels/fused.py::eva_f_fused_stacked``; same contract
+    as :func:`eva_fused_ref` with u = aᵀG."""
+    g32 = g.astype(jnp.float32)
+    a32 = a.astype(jnp.float32)
+    u = matvec_ref(g, a)
+    coeff = (1.0 / (gamma + jnp.sum(a32 * a32, -1)))[..., None, None]
+    p = (1.0 / gamma) * (g32 - coeff * (a32[..., :, None] * u[..., None, :]))
+    return _fused_epilogue(g32, p, m, mu, fold_momentum)

@@ -1,0 +1,38 @@
+"""Waste-aware tile clamping shared by the kernels and the dispatch layer.
+
+The kernels pad each operand up to a multiple of the block size and slice
+the pad back off; with the historical ``min(block, d)`` clamp a 520-row
+operand at the 512 default still paid 504 rows of padded-tile waste
+(2 tiles of 512).  ``fit_block`` keeps the tile *count* implied by the
+requested block but shrinks the block to the smallest size covering the
+dim in that many tiles, so the pad is at most ``tiles - 1`` elements:
+
+    d=520, block=512  ->  2 tiles of 260 (pad 0)   [min() gave 2x512, pad 504]
+    d=1000, block=512 ->  2 tiles of 500 (pad 0)
+    d<=block          ->  1 tile of d    (pad 0, same as min())
+
+Kept dependency-free (no jax import) so both the kernel modules and
+``dispatch`` can use it without an import cycle.
+"""
+from __future__ import annotations
+
+
+def fit_block(d: int, block: int, align: int = 1) -> int:
+    """Largest-waste-free block <= ``block`` for a dim of size ``d``.
+
+    ``align`` rounds the fitted block up to a hardware multiple (TPU wants
+    8-row sublanes); alignment may reintroduce a small pad but never more
+    than ``align - 1`` rows per tile.
+    """
+    if d <= 0:
+        raise ValueError(f'fit_block: dim must be positive, got {d}')
+    if block <= 0:
+        raise ValueError(f'fit_block: block must be positive, got {block}')
+    if d <= block:
+        b = d
+    else:
+        tiles = -(-d // block)      # ceil: tile count at the requested block
+        b = -(-d // tiles)          # smallest block covering d in that many
+    if align > 1 and b % align:
+        b = min(-(-b // align) * align, max(block, align))
+    return b

@@ -51,6 +51,19 @@ def main() -> None:
                          '(vocab-scale factors by default)')
     ap.add_argument('--solve-iters', type=int, default=32,
                     help="iterations of the head-policy='shard' solve")
+    ap.add_argument('--kernel-impl', default=None,
+                    choices=['auto', 'pallas', 'pallas_interpret', 'xla'],
+                    help='kernel dispatch impl for the Eva hot-path ops '
+                         '(kernels.dispatch); default: leave the optimizer '
+                         'on its own use_pallas behavior')
+    ap.add_argument('--autotune', action='store_true',
+                    help='benchmark tile/impl candidates for this model\'s '
+                         'preconditioned shapes, write the winner cache to '
+                         'the run dir and dispatch through it')
+    ap.add_argument('--fused', action='store_true',
+                    help='fused precondition→update epilogue: one kernel '
+                         'launch per bucket for eva/eva_f/eva_s, single-'
+                         'traversal elementwise tail for kfac/foof/shampoo')
     ap.add_argument('--out-dir', default='runs/launch')
     ap.add_argument('--no-prefetch', action='store_true')
     ap.add_argument('--distributed', action='store_true',
@@ -83,7 +96,10 @@ def main() -> None:
     stream = LMStream(vocab=cfg.vocab, seq_len=args.seq_len, batch=args.batch,
                       seed=0)
     data = stream if args.no_prefetch else Prefetcher(stream)
-    opt, capture = make_optimizer(args.opt, lr=args.lr)
+    opt_kwargs = {}
+    if args.fused:
+        opt_kwargs['fused'] = True
+    opt, capture = make_optimizer(args.opt, lr=args.lr, **opt_kwargs)
     taps_fn = None
     if capture.b == 'outer':
         # K-FAC-style capture needs full z-shaped taps (kv.make_full_taps);
@@ -100,8 +116,28 @@ def main() -> None:
     tc = TrainerConfig(total_steps=args.steps, log_every=args.log_every,
                        ckpt_every=args.ckpt_every, profile=args.profile,
                        out_dir=f'{args.out_dir}/{cfg.name}-{args.opt}')
+    kernel = None
+    if args.kernel_impl or args.autotune:
+        from repro.kernels import autotune as ktune
+        from repro.kernels.dispatch import KernelConfig
+        cache_path = None
+        if args.autotune:
+            # tune the distinct 2-D trailing shapes the preconditioner will
+            # actually dispatch (bucketed layers share a shape = one entry)
+            flat = kvlib.flatten_params(params)
+            shapes = sorted({tuple(int(d) for d in flat[p].shape[-2:])
+                             for p in model.precon_paths()
+                             if p in flat and flat[p].ndim >= 2})
+            print(f'[launch] autotuning {len(shapes)} shapes: {shapes}')
+            cache = ktune.tune(shapes)
+            cache_path = str(ktune.write(
+                cache, f'{tc.out_dir}/tile_cache.json'))
+            print(f'[launch] autotune cache -> {cache_path}')
+        kernel = KernelConfig(impl=args.kernel_impl or 'auto',
+                              autotune_cache=cache_path,
+                              autotune=args.autotune)
     trainer = Trainer(model, opt, capture, tc, taps_fn=taps_fn,
-                      factor=factor)
+                      factor=factor, kernel=kernel)
     if args.elastic:
         trainer.fit_elastic(params, data, world=args.world or None)
     else:

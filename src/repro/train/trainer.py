@@ -40,6 +40,7 @@ import jax
 
 from repro.core import kv as kvlib
 from repro.core.transform import GradientTransformation
+from repro.kernels import dispatch as kdispatch
 from repro.obs import events as obs_events
 from repro.obs import spans as obs_spans
 from repro.schedule import reshard as reshard_mod
@@ -68,7 +69,7 @@ class Trainer:
                  capture: kvlib.CaptureConfig, cfg: TrainerConfig,
                  taps_fn: Optional[Callable] = None,
                  sched: Optional[schedrt.RefreshRuntime] = None,
-                 comm=None, factor=None):
+                 comm=None, factor=None, kernel=None):
         self.model = model
         self.opt = opt
         self.capture = capture
@@ -79,12 +80,19 @@ class Trainer:
         # per-factor oversized-Kronecker policy (core.factor_sharded);
         # None = every factor dense, the bit-exact legacy path
         self.factor = factor
+        # kernel dispatch request (kernels.dispatch.KernelConfig); a cache
+        # path installs its autotuned tiles before anything traces
+        self.kernel = kernel
+        if kernel is not None and kernel.autotune_cache:
+            from repro.kernels import dispatch as _dispatch
+            _dispatch.install_cache(kernel.autotune_cache)
         self.out_dir = Path(cfg.out_dir)
         self.out_dir.mkdir(parents=True, exist_ok=True)
         self.ckpt_dir = self.out_dir / 'ckpt'
         self._ckptr = ckpt.AsyncCheckpointer(self.ckpt_dir, cfg.keep_ckpts)
         step_fn = make_train_step(model, opt, capture, taps_fn=taps_fn,
-                                  sched=self.sched, comm=comm, factor=factor)
+                                  sched=self.sched, comm=comm, factor=factor,
+                                  kernel=kernel)
         self.step_fn = jax.jit(step_fn,
                                donate_argnums=(0, 1)
                                if cfg.donate and not cfg.profile else ())
@@ -94,7 +102,7 @@ class Trainer:
             # but donation is off so a fenced phase's inputs stay alive
             self._phases = tuple(jax.jit(f) for f in make_phased_step(
                 model, opt, capture, taps_fn=taps_fn, sched=self.sched,
-                comm=comm, factor=factor))
+                comm=comm, factor=factor, kernel=kernel))
         self._watchdog = obs_spans.StragglerWatchdog(cfg.straggler_factor)
         self._preempted = False
         self.metrics_path = self.out_dir / 'metrics.jsonl'
@@ -209,7 +217,8 @@ class Trainer:
                                                 taps_fn=self.taps_fn,
                                                 sched=self.sched,
                                                 comm=self.comm,
-                                                factor=self.factor)}
+                                                factor=self.factor,
+                                                kernel=self.kernel)}
                 state, meta = ckpt.restore(self.ckpt_dir, latest, template)
                 params, opt_state = state['params'], state['opt_state']
                 start_step = meta.get('next_step', latest)
@@ -219,7 +228,8 @@ class Trainer:
             opt_state = init_opt_state(self.model, self.opt, self.capture,
                                        params, data.batch_at(start_step),
                                        taps_fn=self.taps_fn, sched=self.sched,
-                                       comm=self.comm, factor=self.factor)
+                                       comm=self.comm, factor=self.factor,
+                                       kernel=self.kernel)
 
         # refresh count already in the (possibly restored) state — the
         # cumulative exchanged-bytes estimate below must count only THIS
@@ -303,6 +313,11 @@ class Trainer:
                              + refresh_b * (rec.get('refreshes', ref_base)
                                             - ref_base))
                             / 2 ** 20, 3)
+                    if self.kernel is not None:
+                        rec['kernel_impl'] = self.kernel.impl
+                        tiles = kdispatch.choices_snapshot()
+                        if tiles:
+                            rec['kernel_tiles'] = tiles
                     recorder.emit('step', **rec)
                     if self._phases is not None:
                         self._emit_profile(recorder, step, phase_args,
@@ -385,7 +400,7 @@ class Trainer:
             return init_opt_state(self.model, self.opt, self.capture, params,
                                   data.batch_at(step), taps_fn=self.taps_fn,
                                   sched=self.sched, comm=self.comm,
-                                  factor=self.factor)
+                                  factor=self.factor, kernel=self.kernel)
 
         opt_state = None
         world_from = world
@@ -442,7 +457,8 @@ class Trainer:
             if w_to not in step_fns:
                 dp = make_dp_step(self.model, self.opt, self.capture, mesh,
                                   taps_fn=self.taps_fn, sched=self.sched,
-                                  comm=self.comm, factor=self.factor)
+                                  comm=self.comm, factor=self.factor,
+                                  kernel=self.kernel)
                 step_fns[w_to] = jax.jit(
                     dp, donate_argnums=(0, 1) if cfg.donate else ())
             step_fn = step_fns[w_to]
@@ -498,9 +514,16 @@ class Trainer:
                                       step_time_s=round(dt, 6))
                     prev_ref = cur_ref
                 if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+                    kfields = {}
+                    if self.kernel is not None:
+                        kfields['kernel_impl'] = self.kernel.impl
+                        tiles = kdispatch.choices_snapshot()
+                        if tiles:
+                            kfields['kernel_tiles'] = tiles
                     recorder.emit('step', step=step, loss=loss,
                                   grad_norm=float(metrics['grad_norm']),
-                                  step_time_s=round(dt, 4), **sched_fields)
+                                  step_time_s=round(dt, 4), **sched_fields,
+                                  **kfields)
                     print(f'[trainer] step {step:6d} loss {loss:.4f} '
                           f'({dt*1e3:.0f} ms) W={world}', flush=True)
                 if cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:

@@ -1,0 +1,205 @@
+"""Fused precondition→update epilogue (kernels/fused.py + the optimizer
+``fused=True`` paths): the fused single-launch chain must reproduce the
+composed bilinear → rank1_update → clip/momentum chain.
+
+Tolerance contract (see the fused.py module docstring): with
+``fold_momentum=False`` the fused output is BIT-exact vs the composed
+standalone kernels (identical tile visit order + identical tile formulas);
+the momentum-folded output and the aux partials differ from the composed
+chain only by f32 reduction/FMA order, within 1e-6.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kv as kvlib
+from repro.core.eva import eva
+from repro.core.eva_f import eva_f
+from repro.core.eva_s import eva_s
+from repro.core.foof import foof
+from repro.core.kfac import kfac
+from repro.core.shampoo import shampoo
+from repro.core.transform import Extras
+from repro.kernels import fused, ref
+from repro.kernels.bilinear import bilinear_stacked
+from repro.kernels.rank1_update import rank1_update_stacked
+
+GAMMA = 0.03
+MU = 0.9
+SHAPES = [(3, 64, 48), (2, 129, 127), (1, 200, 136)]
+
+
+def _mk_stacked(shape, key=0):
+    L, d_in, d_out = shape
+    ks = jax.random.split(jax.random.PRNGKey(key), 4)
+    g = jax.random.normal(ks[0], shape, jnp.float32)
+    a = jax.random.normal(ks[1], (L, d_in), jnp.float32)
+    b = jax.random.normal(ks[2], (L, d_out), jnp.float32)
+    m = jax.random.normal(ks[3], shape, jnp.float32)
+    return g, a, b, m
+
+
+def _composed_eva_p(g, a, b, block=128):
+    """The composed standalone-kernel chain the fused launch replaces."""
+    dot = bilinear_stacked(g, a, b, block_in=block, block_out=block)
+    denom = GAMMA + jnp.sum(a * a, -1) * jnp.sum(b * b, -1)
+    return rank1_update_stacked(g, a, b, dot / denom,
+                                jnp.full_like(denom, 1.0 / GAMMA),
+                                block_in=block, block_out=block)
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+
+
+@pytest.mark.parametrize('shape', SHAPES)
+def test_eva_fused_foldoff_matches_composed(shape):
+    """Tile order matches the standalone kernels, so the only deviation
+    left is how XLA contracts the in-kernel coeff division vs the
+    host-side one — observed ≤1 f32 ulp at the update's O(1/γ) scale
+    (3.8e-6 abs at |P|≈32).  γ·diff stays under 1e-6."""
+    g, a, b, m = _mk_stacked(shape)
+    out, _ = fused.eva_fused_stacked(g, a, b, GAMMA, m, MU,
+                                     fold_momentum=False,
+                                     block_in=128, block_out=128)
+    comp = _composed_eva_p(g, a, b)
+    np.testing.assert_allclose(GAMMA * np.asarray(out),
+                               GAMMA * np.asarray(comp),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize('shape', SHAPES)
+def test_eva_fused_foldon_matches_jnp_tail(shape):
+    g, a, b, m = _mk_stacked(shape)
+    out, aux = fused.eva_fused_stacked(g, a, b, GAMMA, m, MU,
+                                       fold_momentum=True,
+                                       block_in=128, block_out=128)
+    want = MU * m + _composed_eva_p(g, a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+    want_aux = jnp.stack([jnp.sum(want * g, (-2, -1)),
+                          jnp.sum(want * want, (-2, -1)),
+                          jnp.sum(g * g, (-2, -1))], axis=-1)
+    np.testing.assert_allclose(np.asarray(aux), np.asarray(want_aux),
+                               rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize('shape', SHAPES)
+@pytest.mark.parametrize('fold', [False, True])
+def test_eva_fused_matches_ref_twin(shape, fold):
+    g, a, b, m = _mk_stacked(shape)
+    out, aux = fused.eva_fused_stacked(g, a, b, GAMMA, m, MU,
+                                       fold_momentum=fold,
+                                       block_in=128, block_out=128)
+    r_out, r_aux = ref.eva_fused_ref(g, a, b, GAMMA, m, MU,
+                                     fold_momentum=fold)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r_out),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(aux), np.asarray(r_aux),
+                               rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize('shape', SHAPES)
+@pytest.mark.parametrize('fold', [False, True])
+def test_eva_f_fused_matches_ref_twin(shape, fold):
+    g, a, _, m = _mk_stacked(shape)
+    out, aux = fused.eva_f_fused_stacked(g, a, GAMMA, m, MU,
+                                         fold_momentum=fold,
+                                         block_in=128, block_out=128)
+    r_out, r_aux = ref.eva_f_fused_ref(g, a, GAMMA, m, MU,
+                                       fold_momentum=fold)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r_out),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(aux), np.asarray(r_aux),
+                               rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize('fn', ['eva', 'eva_f'])
+def test_fused_single_vs_multi_tile_agree(fn):
+    """Tile count must not change the result beyond f32 reduction order."""
+    g, a, b, m = _mk_stacked((2, 129, 127))
+    if fn == 'eva':
+        one = fused.eva_fused_stacked(g, a, b, GAMMA, m, MU,
+                                      block_in=512, block_out=512)
+        many = fused.eva_fused_stacked(g, a, b, GAMMA, m, MU,
+                                       block_in=32, block_out=32)
+    else:
+        one = fused.eva_f_fused_stacked(g, a, GAMMA, m, MU,
+                                        block_in=512, block_out=512)
+        many = fused.eva_f_fused_stacked(g, a, GAMMA, m, MU,
+                                         block_in=32, block_out=32)
+    np.testing.assert_allclose(np.asarray(one[0]), np.asarray(many[0]),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(one[1]), np.asarray(many[1]),
+                               rtol=2e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# optimizer level: fused=True ≡ fused=False for all six optimizers
+
+
+def _params():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    return {'l1': {'w': jax.random.normal(ks[0], (32, 16)),
+                   'b': jax.random.normal(ks[1], (16,))},
+            'l2': {'w': jax.random.normal(ks[2], (32, 16))},
+            'l3': {'w': jax.random.normal(ks[3], (16, 8))}}
+
+
+def _grads(step):
+    ks = jax.random.split(jax.random.PRNGKey(100 + step), 4)
+    return {'l1': {'w': jax.random.normal(ks[0], (32, 16)),
+                   'b': jax.random.normal(ks[1], (16,))},
+            'l2': {'w': jax.random.normal(ks[2], (32, 16))},
+            'l3': {'w': jax.random.normal(ks[3], (16, 8))}}
+
+
+def _stats(kind, step):
+    """Per-layer curvature stats of the shape each optimizer family
+    captures (kv.LayerStats): rank-1 vectors for eva/eva_f, PSD outer
+    products for the solve-based families."""
+    ks = jax.random.split(jax.random.PRNGKey(200 + step), 12)
+
+    def ls(i, din, dout):
+        if kind == 'eva':
+            return kvlib.LayerStats(
+                a_mean=jax.random.normal(ks[i], (din,)),
+                b_mean=jax.random.normal(ks[i + 1], (dout,)))
+        if kind == 'eva_f':
+            return kvlib.LayerStats(a_mean=jax.random.normal(ks[i], (din,)))
+        if kind == 'foof':
+            a = jax.random.normal(ks[i], (din, din))
+            return kvlib.LayerStats(a_outer=a @ a.T / din)
+        a = jax.random.normal(ks[i], (din, din))
+        b = jax.random.normal(ks[i + 1], (dout, dout))
+        return kvlib.LayerStats(a_outer=a @ a.T / din, b_outer=b @ b.T / dout)
+
+    return {'l1/w': ls(0, 32, 16), 'l2/w': ls(3, 32, 16),
+            'l3/w': ls(6, 16, 8)}
+
+
+def _run(factory, kind, steps=4, **kw):
+    params = _params()
+    opt = factory(lr=0.1, **kw)
+    state = opt.init(params, Extras(stats=_stats(kind, 0)))
+    outs = []
+    for t in range(steps):
+        upd, state = opt.update(_grads(t), state, params=params,
+                                extras=Extras(stats=_stats(kind, t)))
+        outs.append(upd)
+    return outs
+
+
+@pytest.mark.parametrize('name,factory', [
+    ('eva', eva), ('eva_f', eva_f), ('eva_s', eva_s),
+    ('kfac', kfac), ('foof', foof), ('shampoo', shampoo)])
+def test_optimizer_fused_matches_composed(name, factory):
+    base = _run(factory, name, fused=False)
+    fusd = _run(factory, name, fused=True)
+    for t, (u0, u1) in enumerate(zip(base, fusd)):
+        for x, y in zip(jax.tree_util.tree_leaves(u0),
+                        jax.tree_util.tree_leaves(u1)):
+            np.testing.assert_allclose(
+                np.asarray(x, np.float32), np.asarray(y, np.float32),
+                atol=1e-6, rtol=1e-6, err_msg=f'{name} step {t}')

@@ -123,6 +123,95 @@ def test_matvec_cols_stacked_matches_per_item():
         np.testing.assert_array_equal(np.asarray(out[l]), np.asarray(one))
 
 
+# ---------------------------------------------------------------------------
+# tile-boundary edge cases: non-divisible dims + stack depths.  The hard
+# guarantee is stacked ≡ per-item (identical tile programs, bit-exact);
+# agreement vs the einsum refs is tight-tolerance — XLA contracts the
+# broadcast formulas with different FMA/reduction order, so bit-identity
+# vs ref.py does not hold even for single-tile launches.
+
+ODD_SHAPES = [(7, 5), (65, 33), (129, 127)]
+BLOCKS = [32, 512]  # multi-tile with padding remainder / single padded tile
+
+
+def _mk_stacked(L, shape, key=7):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    g = jax.random.normal(ks[0], (L,) + shape, jnp.float32)
+    a = jax.random.normal(ks[1], (L, shape[0]), jnp.float32)
+    b = jax.random.normal(ks[2], (L, shape[1]), jnp.float32)
+    return g, a, b
+
+
+@pytest.mark.parametrize('shape', ODD_SHAPES)
+@pytest.mark.parametrize('block', BLOCKS)
+def test_tile_boundary_vs_ref(shape, block):
+    g, a, b = _mk(shape, jnp.float32, key=11)
+    np.testing.assert_allclose(
+        np.asarray(bilinear(g, a, b, block_in=block, block_out=block)),
+        np.asarray(ref.bilinear_ref(g, a, b)),
+        atol=1e-4 * (shape[0] * shape[1]) ** 0.5, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(matvec(g, a, block_in=block, block_out=block)),
+        np.asarray(ref.matvec_ref(g, a)),
+        atol=1e-4 * shape[0] ** 0.5, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(rank1_update(g, a, b, jnp.float32(0.37), jnp.float32(2.5),
+                                block_in=block, block_out=block)),
+        np.asarray(ref.rank1_update_ref(g, a, b, 0.37, 2.5)),
+        atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize('shape', ODD_SHAPES)
+@pytest.mark.parametrize('block', BLOCKS)
+@pytest.mark.parametrize('L', [1, 3])
+def test_tile_boundary_stacked_bit_identical_to_per_item(shape, block, L):
+    from repro.kernels.bilinear import bilinear_stacked
+    from repro.kernels.matvec import matvec_stacked
+    from repro.kernels.rank1_update import rank1_update_stacked
+
+    g, a, b = _mk_stacked(L, shape)
+    coeff = jnp.linspace(0.1, 0.9, L)
+    scale = jnp.linspace(1.5, 2.5, L)
+    dot_s = bilinear_stacked(g, a, b, block_in=block, block_out=block)
+    mv_s = matvec_stacked(g, a, block_in=block, block_out=block)
+    r1_s = rank1_update_stacked(g, a, b, coeff, scale,
+                                block_in=block, block_out=block)
+    for l in range(L):
+        np.testing.assert_array_equal(
+            np.asarray(dot_s[l]),
+            np.asarray(bilinear(g[l], a[l], b[l],
+                                block_in=block, block_out=block)))
+        np.testing.assert_array_equal(
+            np.asarray(mv_s[l]),
+            np.asarray(matvec(g[l], a[l],
+                              block_in=block, block_out=block)))
+        np.testing.assert_array_equal(
+            np.asarray(r1_s[l]),
+            np.asarray(rank1_update(g[l], a[l], b[l], coeff[l], scale[l],
+                                    block_in=block, block_out=block)))
+
+
+@pytest.mark.parametrize('shape', ODD_SHAPES)
+def test_tile_boundary_block_size_invariance(shape):
+    """Padding remainder tiles must not leak into the result: the same op
+    at block 32 vs one padded tile agrees to f32 reduction order."""
+    g, a, b = _mk(shape, jnp.float32, key=13)
+    np.testing.assert_allclose(
+        np.asarray(bilinear(g, a, b, block_in=32, block_out=32)),
+        np.asarray(bilinear(g, a, b, block_in=512, block_out=512)),
+        atol=1e-4 * (shape[0] * shape[1]) ** 0.5, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(matvec(g, a, block_in=32, block_out=32)),
+        np.asarray(matvec(g, a, block_in=512, block_out=512)),
+        atol=1e-4 * shape[0] ** 0.5, rtol=1e-5)
+    # rank1 is elementwise: tile layout cannot change any element
+    np.testing.assert_array_equal(
+        np.asarray(rank1_update(g, a, b, jnp.float32(0.37), jnp.float32(2.5),
+                                block_in=32, block_out=32)),
+        np.asarray(rank1_update(g, a, b, jnp.float32(0.37), jnp.float32(2.5),
+                                block_in=512, block_out=512)))
+
+
 def test_optimizer_use_pallas_flag():
     """eva(use_pallas=True) == eva(use_pallas=False) end-to-end."""
     from repro.core import kv as kvlib
